@@ -1,0 +1,30 @@
+"""Paper §2.1 — block granularity: 16 KB is the seek optimum.
+
+Sweeps block size: ratio (headers amortize worse at small blocks), seek
+latency (dispatch floor makes sub-16K counterproductive), full-decode
+throughput (large blocks amortize better)."""
+import numpy as np
+
+from benchmarks.common import corpora, row, time_fn
+from repro.core import encoder
+from repro.core.decoder import Decoder
+
+
+def main(small: bool = False):
+    buf = corpora(2000 if small else 6000)["fastq_platinum"]
+    for bs in (4096, 16384, 65536, 1024 * 1024):
+        if bs > len(buf):
+            continue
+        a = encoder.encode(buf, block_size=bs)
+        d = Decoder(a, backend="ref")
+        one = np.array([a.n_blocks // 2])
+        t_seek = time_fn(lambda: d.decode_blocks(one), iters=5)
+        sel = np.arange(a.n_blocks)
+        t_full = time_fn(lambda: d.decode_blocks(sel), iters=2)
+        row(f"blocksize/{bs}", t_seek,
+            f"ratio={a.ratio:.2f};seek_us={t_seek*1e6:.0f};"
+            f"full_GBps_cpu={len(buf)/t_full/1e9:.3f};blocks={a.n_blocks}")
+
+
+if __name__ == "__main__":
+    main()

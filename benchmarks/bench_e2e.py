@@ -1,0 +1,46 @@
+"""Paper §6.1 — honest end-to-end including the host link.
+
+Measures device-resident decode vs decode + copy-back-to-host on THIS
+container, and projects the v5e picture: decode at roofline vs the ~
+host-link ceiling — the argument for compressed residency (any decoder that
+returns its result to the host is bounded by the host link, so keep data
+compressed in device memory and decode regions on demand)."""
+import numpy as np
+
+import jax
+
+from benchmarks.common import corpora, row, time_fn
+from repro.core import encoder
+from repro.core.decoder import Decoder
+
+V5E_PCIE_GBPS = 32.0   # PCIe Gen4 x16-class host link (projection constant)
+V5E_HBM_GBPS = 819.0
+
+
+def main(small: bool = False):
+    buf = corpora(2000 if small else 8000)["fastq_platinum"]
+    a = encoder.encode(buf, block_size=16384)
+    d = Decoder(a, backend="ref")
+    sel = np.arange(a.n_blocks)
+
+    t_dev = time_fn(lambda: d.decode_blocks(sel), iters=3)
+    row("e2e/device_resident_decode", t_dev,
+        f"{len(buf)/t_dev/1e9:.3f}GB/s(cpu)")
+
+    def roundtrip():
+        out = d.decode_blocks(sel)
+        return np.asarray(out)          # device→host copy included
+
+    t_rt = time_fn(roundtrip, iters=3)
+    row("e2e/decode_plus_host_copy", t_rt,
+        f"{len(buf)/t_rt/1e9:.3f}GB/s(cpu);copy_share={1-t_dev/t_rt:.0%}")
+
+    # v5e projection: resident decode bounded by HBM vs host-returning
+    # bounded by the PCIe-class link — the §6.1 ceiling argument
+    row("e2e/v5e_projection", 0.0,
+        f"resident<= {V5E_HBM_GBPS:.0f}GB/s(HBM) vs host-returning<= "
+        f"{V5E_PCIE_GBPS:.0f}GB/s(link): {V5E_HBM_GBPS/V5E_PCIE_GBPS:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper §4.1 — read→block index vs `.fai`: size ratio, warm O(1) lookup
+latency, end-to-end read fetch (lookup + covering-block decode)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import corpora, row, time_fn
+from repro.core import encoder
+from repro.core.index import FaiIndex, ReadIndex
+from repro.core.residency import CompressedResidentStore
+
+
+def main(small: bool = False):
+    buf = corpora(2000 if small else 10_000)["fastq_platinum"]
+    a = encoder.encode(buf, block_size=16384)
+    idx = ReadIndex.build(buf, 16384)
+    fai = FaiIndex.build(buf)
+    store = CompressedResidentStore(a, idx, backend="ref")
+    ref = np.frombuffer(buf, np.uint8)
+
+    row("index/read_index_bytes", 0.0,
+        f"{idx.nbytes}B={8}B/read;reads={idx.n_reads}")
+    row("index/fai_bytes", 0.0,
+        f"{fai.nbytes}B;ours_smaller={fai.nbytes/idx.nbytes:.1f}x")
+
+    # warm lookup latency (O(1) array load vs dict lookup)
+    r = idx.n_reads // 2
+    t0 = time.perf_counter()
+    for _ in range(10000):
+        idx.lookup(r)
+    t_ours = (time.perf_counter() - t0) / 10000
+    name = list(fai.entries)[r]
+    t0 = time.perf_counter()
+    for _ in range(10000):
+        fai.lookup(name)
+    t_fai = (time.perf_counter() - t0) / 10000
+    row("index/warm_lookup_ours", t_ours, "O(1) array")
+    row("index/warm_lookup_fai", t_fai, "dict")
+
+    # end-to-end read fetch (lookup + decode covering blocks)
+    t_fetch = time_fn(lambda: store.fetch_read(r), iters=5)
+    got = np.asarray(store.fetch_read(r))
+    lo, hi, _ = idx.lookup(r)
+    assert np.array_equal(got, ref[lo:hi])
+    row("index/read_fetch_e2e", t_fetch, "lookup+block_decode,bit-perfect")
+
+    # batched request fetch (the serving path)
+    ids = np.arange(0, idx.n_reads, max(1, idx.n_reads // 64))[:64]
+    t_batch = time_fn(lambda: store.fetch_records(ids, 128), iters=3)
+    row("index/batched_fetch_64reads", t_batch,
+        f"{t_batch/len(ids)*1e6:.1f}us/read")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Table 1 — Mode 1 (host-entropy, open path), host-to-host MB/s.
+
+Three columns map to: pure-host decode (numpy entropy + numpy match),
+Mode-1 hybrid (host entropy + device match), and the batched-device path as
+the multi-thread stand-in. CPU container: all 'device' numbers are CPU-
+device numbers (labeled); the paper's finding to reproduce is the SHAPE:
+host-to-host Mode 1 is bottlenecked by serial entropy + copies.
+"""
+import numpy as np
+
+from benchmarks.common import corpora, row, time_fn
+from repro.core import encoder
+from repro.core.decoder import Decoder, _entropy_decode_host
+from repro.core import entropy as ent
+from repro.core.format import N_STREAMS
+
+
+def decode_cpu_numpy(a) -> np.ndarray:
+    """Pure-host decode: numpy rANS + numpy pointer-doubling match."""
+    sel = np.arange(a.n_blocks)
+    idx = (sel[:, None] * N_STREAMS + np.arange(N_STREAMS)).reshape(-1)
+    streams = ent.rans_decode_batch_np(
+        a.words, a.word_off.reshape(-1)[idx], a.n_syms.reshape(-1)[idx],
+        a.lanes.reshape(-1)[idx],
+        np.tile(np.arange(N_STREAMS, dtype=np.int32), a.n_blocks), a.freqs)
+    out = np.zeros(a.n_blocks * a.block_size, np.uint8)
+    for b in range(a.n_blocks):
+        lits = streams[b * N_STREAMS + 0]
+        lens = streams[b * N_STREAMS + 1]
+        offs = streams[b * N_STREAMS + 2]
+        cmds = streams[b * N_STREAMS + 3]
+        n = int(a.n_cmds[b])
+        ll = cmds[:n].astype(np.int64) | (cmds[n:2 * n].astype(np.int64) << 8)
+        ml = lens[:n].astype(np.int64) | (lens[n:2 * n].astype(np.int64) << 8)
+        of = offs[:n].astype(np.int64) | (offs[n:2 * n].astype(np.int64) << 8)
+        base = b * a.block_size
+        cur = 0
+        lit_cur = 0
+        for j in range(n):
+            out[base + cur: base + cur + ll[j]] = lits[lit_cur:lit_cur + ll[j]]
+            cur += int(ll[j])
+            lit_cur += int(ll[j])
+            if ml[j]:
+                src = int(of[j])
+                for t in range(int(ml[j])):        # overlap-correct scalar copy
+                    out[base + cur + t] = out[base + src + t]
+                cur += int(ml[j])
+    return out[:a.raw_size]
+
+
+def main(small: bool = False):
+    data = corpora(1500 if small else 4000)
+    for name, buf in data.items():
+        a = encoder.encode(buf, block_size=16384)
+        ref = np.frombuffer(buf, np.uint8)
+        d = Decoder(a, backend="ref")
+
+        t_host = time_fn(lambda: decode_cpu_numpy(a), warmup=0, iters=1)
+        out = decode_cpu_numpy(a)
+        assert np.array_equal(out, ref), "host decode not bit-perfect"
+        row(f"mode1/{name}/host_only", t_host,
+            f"{len(buf)/t_host/1e6:.1f}MB/s")
+
+        sel = np.arange(a.n_blocks)
+        t_m1 = time_fn(lambda: d.decode_blocks_host_entropy(sel), iters=2)
+        assert np.array_equal(
+            np.asarray(d.decode_blocks_host_entropy(sel)).reshape(-1)[:len(ref)], ref)
+        row(f"mode1/{name}/host_entropy_device_match", t_m1,
+            f"{len(buf)/t_m1/1e6:.1f}MB/s")
+
+        t_m2 = time_fn(lambda: d.decode_blocks(sel), iters=2)
+        row(f"mode1/{name}/device_resident_ref", t_m2,
+            f"{len(buf)/t_m2/1e6:.1f}MB/s;ratio={a.ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared benchmark utilities. All numbers measured on THIS container's CPU
+devices and labeled as such — TPU v5e throughput is projected by the
+roofline (EXPERIMENTS.md §Roofline), not faked here."""
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Best-of-N wall time in seconds (after warmup), blocking on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    out = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(out, flush=True)
+    return out
+
+
+def corpora(n_reads: int = 8000):
+    from repro.data.fastq import make_fastq
+    return {
+        "fastq_platinum": make_fastq("platinum", n_reads=n_reads, seed=1),
+        "fastq_noisy": make_fastq("noisy", n_reads=n_reads, seed=2),
+    }

@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. All wall-clock numbers are
+THIS container's CPU-device numbers (labeled `cpu`); TPU v5e performance is
+projected by the roofline report (EXPERIMENTS.md §Roofline), never faked.
+
+  python -m benchmarks.run [--small] [--only mode2,ratio,...]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+_TABLES = [
+    ("mode1", "benchmarks.bench_mode1", "Table 1: Mode 1 host-to-host"),
+    ("mode2", "benchmarks.bench_mode2", "Table 2: Mode 2 device-resident"),
+    ("random_access", "benchmarks.bench_random_access",
+     "Table 3: seek vs full decode"),
+    ("index", "benchmarks.bench_index", "§4.1: read index vs .fai"),
+    ("scale", "benchmarks.bench_scale", "§5: range decode / memory budget"),
+    ("e2e", "benchmarks.bench_e2e", "§6.1: host-link ceiling"),
+    ("ratio", "benchmarks.bench_ratio", "§6.2: ratio + stream separation"),
+    ("entropy", "benchmarks.bench_entropy", "§6.4: open entropy stage"),
+    ("blocksize", "benchmarks.bench_blocksize", "§2.1: block-size sweep"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="reduced corpora (CI-speed)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, mod_name, desc in _TABLES:
+        if only and key not in only:
+            continue
+        print(f"# --- {desc} ({mod_name}) ---", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main(small=args.small)
+        except Exception:                                  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(key)
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Device-resident ACEAPEX decode (paper §3).
+
+Two modes, kept distinct exactly as the paper insists (§3.1):
+
+  Mode 1 ("host-entropy"): entropy decode on the host (numpy), match
+      resolution on device — the open `aceapex_cuda`-equivalent path.
+  Mode 2 ("device"): entropy *and* match resolution on device, archive
+      arrays resident in device memory — the full device-resident pipeline.
+
+Both decode an arbitrary contiguous block range (position-invariant random
+access, §4): the unit of work is a *block selection*, and whole-file decode
+is simply the selection [0, n_blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as ent
+from repro.core.format import (N_STREAMS, S_COMMANDS, S_LENGTHS, S_LITERALS,
+                               S_OFFSETS, Archive, MAX_LANES)
+
+
+# --------------------------------------------------------------- device form
+@dataclasses.dataclass
+class DeviceArchive:
+    """The compressed archive resident in device memory (jnp arrays) plus the
+    static decode geometry (python ints — jit-static per archive)."""
+    words: jnp.ndarray          # u16[W]
+    word_off: jnp.ndarray       # i32[n_blocks, 4]
+    n_syms: jnp.ndarray         # i32[n_blocks, 4]
+    lanes: jnp.ndarray          # i32[n_blocks, 4]
+    n_cmds: jnp.ndarray         # i32[n_blocks]
+    block_start: jnp.ndarray    # i32[n_blocks] (device path addresses < 2^31)
+    block_len: jnp.ndarray      # i32[n_blocks]
+    freqs: np.ndarray           # host (tables are rebuilt on device per call)
+    block_size: int
+    n_blocks: int
+    raw_size: int
+    mode: str
+    entropy: str
+    max_cmds: int               # static padding geometry
+    t_max_lit: int              # max rANS steps, literal streams
+    t_max_cmd: int              # max rANS steps, plane streams
+    offset_bytes: int
+
+    @property
+    def device_bytes(self) -> int:
+        tot = 0
+        for f in (self.words, self.word_off, self.n_syms, self.lanes,
+                  self.n_cmds, self.block_start, self.block_len):
+            tot += f.size * f.dtype.itemsize
+        return tot
+
+
+def to_device(a: Archive) -> DeviceArchive:
+    def tmax(col_mask):
+        n = a.n_syms[:, col_mask].astype(np.int64)
+        k = np.maximum(a.lanes[:, col_mask].astype(np.int64), 1)
+        t = np.where(n > 0, -(-n // k), 0)
+        return int(t.max(initial=0))
+
+    lit_cols = np.array([S_LITERALS])
+    cmd_cols = np.array([S_LENGTHS, S_OFFSETS, S_COMMANDS])
+    return DeviceArchive(
+        words=jnp.asarray(a.words),
+        word_off=jnp.asarray(a.word_off.astype(np.int32)),
+        n_syms=jnp.asarray(a.n_syms),
+        lanes=jnp.asarray(a.lanes),
+        n_cmds=jnp.asarray(a.n_cmds),
+        block_start=jnp.asarray(a.block_start.astype(np.int32)),
+        block_len=jnp.asarray(a.block_len),
+        freqs=np.asarray(a.freqs),
+        block_size=int(a.block_size),
+        n_blocks=int(a.n_blocks),
+        raw_size=int(a.raw_size),
+        mode=a.mode,
+        entropy=a.entropy,
+        max_cmds=int(a.n_cmds.max(initial=1)),
+        t_max_lit=tmax(lit_cols),
+        t_max_cmd=tmax(cmd_cols),
+        offset_bytes=int(a.offset_bytes),
+    )
+
+
+# ------------------------------------------------------------ stream extract
+def _linearize(rows: jnp.ndarray, n: jnp.ndarray, k: jnp.ndarray,
+               out_len: int, k_max: int = MAX_LANES) -> jnp.ndarray:
+    """rows (B, T*k_max) step-major rANS output → (B, out_len) linear bytes.
+
+    Symbol i lives at (i // K) * k_max + (i % K); i >= n → 0.
+    """
+    i = jnp.arange(out_len, dtype=jnp.int32)[None, :]
+    k = jnp.maximum(k, 1)[:, None]
+    idx = (i // k) * k_max + (i % k)
+    idx = jnp.clip(idx, 0, rows.shape[1] - 1)
+    vals = jnp.take_along_axis(rows, idx, axis=1)
+    return jnp.where(i < n[:, None], vals, 0).astype(jnp.uint8)
+
+
+def _u16_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
+                     max_cmds: int) -> jnp.ndarray:
+    """planes (B, 2*max_cmds) = [lo plane | hi plane] → (B, max_cmds) i32."""
+    lo = planes[:, :max_cmds].astype(jnp.int32)
+    hi_idx = jnp.minimum(n_cmds[:, None] + jnp.arange(max_cmds)[None, :],
+                         planes.shape[1] - 1)
+    hi = jnp.take_along_axis(planes.astype(jnp.int32), hi_idx, axis=1)
+    j = jnp.arange(max_cmds, dtype=jnp.int32)[None, :]
+    v = lo | (hi << 8)
+    return jnp.where(j < n_cmds[:, None], v, 0)
+
+
+def _u64lo_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
+                       max_cmds: int) -> jnp.ndarray:
+    """8-plane global offsets → low 31 bits as i32 (device decode addresses
+    < 2^31; the host format keeps full 64-bit)."""
+    nc = n_cmds[:, None]
+    j = jnp.arange(max_cmds, dtype=jnp.int32)[None, :]
+    v = jnp.zeros(planes.shape[:1] + (max_cmds,), jnp.int32)
+    for b in range(4):  # 4 bytes = 32 bits (top bit unused)
+        idx = jnp.minimum(b * nc + j, planes.shape[1] - 1)
+        byte = jnp.take_along_axis(planes.astype(jnp.int32), idx, axis=1)
+        shift = 8 * b
+        if b == 3:
+            byte = byte & 0x7F
+        v = v | (byte << shift)
+    return jnp.where(j < nc, v, 0)
+
+
+def _entropy_decode_sel(da: DeviceArchive, sel: jnp.ndarray, backend: str):
+    """rANS/raw decode of the 4 streams of each selected block.
+
+    Returns dict of per-block linearized stream bytes:
+      literals (B, block_size), lengths (B, 2*max_cmds),
+      offsets (B, off_planes*max_cmds), commands (B, 2*max_cmds)
+    """
+    B = sel.shape[0]
+    woff = da.word_off[sel]          # (B, 4)
+    nsym = da.n_syms[sel]
+    lanes = da.lanes[sel]
+    off_planes = 2 if da.offset_bytes == 2 else 8
+
+    if da.entropy == "raw":
+        def unpack(col, out_len):
+            def one(off, n):
+                nw = (out_len + 1) // 2
+                idx = off + jnp.arange(nw, dtype=jnp.int32)
+                idx = jnp.clip(idx, 0, da.words.shape[0] - 1)
+                w = da.words[idx].astype(jnp.uint16)
+                b = jnp.stack([w & 0xFF, w >> 8], axis=1).reshape(-1)
+                i = jnp.arange(out_len, dtype=jnp.int32)
+                return jnp.where(i < n, b[:out_len], 0).astype(jnp.uint8)
+            return jax.vmap(one)(woff[:, col], nsym[:, col])
+        return {
+            "literals": unpack(S_LITERALS, da.block_size),
+            "lengths": unpack(S_LENGTHS, 2 * da.max_cmds),
+            "offsets": unpack(S_OFFSETS, off_planes * da.max_cmds),
+            "commands": unpack(S_COMMANDS, 2 * da.max_cmds),
+        }
+
+    from repro.kernels import ops
+    # flatten: stream index = block-major, stream-minor
+    flat_off = woff.reshape(-1)
+    flat_nsym = nsym.reshape(-1)
+    flat_lanes = lanes.reshape(-1)
+    cls = jnp.tile(jnp.arange(N_STREAMS, dtype=jnp.int32), B)
+    t_max = max(da.t_max_lit, da.t_max_cmd)
+    rows, _ = ops.rans_decode(
+        da.words, flat_off, flat_nsym, flat_lanes, cls, da.freqs,
+        t_max=t_max, backend=backend)
+    rows = rows.reshape(B, N_STREAMS, -1)
+
+    def lin(col, out_len):
+        return _linearize(rows[:, col], nsym[:, col], lanes[:, col], out_len)
+
+    return {
+        "literals": lin(S_LITERALS, da.block_size),
+        "lengths": lin(S_LENGTHS, 2 * da.max_cmds),
+        "offsets": lin(S_OFFSETS, off_planes * da.max_cmds),
+        "commands": lin(S_COMMANDS, 2 * da.max_cmds),
+    }
+
+
+def _entropy_decode_host(a: Archive, sel: np.ndarray):
+    """Mode 1: entropy decode on the host (numpy oracle), return device-ready
+    per-block stream bytes."""
+    B = len(sel)
+    idx = (np.asarray(sel)[:, None] * N_STREAMS
+           + np.arange(N_STREAMS)[None, :]).reshape(-1)
+    woff = a.word_off.reshape(-1)[idx]
+    nsym = a.n_syms.reshape(-1)[idx]
+    lanes = a.lanes.reshape(-1)[idx]
+    cls = np.tile(np.arange(N_STREAMS, dtype=np.int32), B)
+    if a.entropy == "raw":
+        streams = []
+        for o, n in zip(woff, nsym):
+            nw = (int(n) + 1) // 2
+            w = a.words[int(o):int(o) + nw]
+            b = np.stack([w & 0xFF, w >> 8], axis=1).reshape(-1).astype(np.uint8)
+            streams.append(b[:int(n)])
+    else:
+        streams = ent.rans_decode_batch_np(a.words, woff, nsym, lanes, cls,
+                                           a.freqs)
+    max_cmds = int(a.n_cmds.max(initial=1))
+    off_planes = 2 if a.offset_bytes == 2 else 8
+
+    def pad_to(arr, L):
+        out = np.zeros(L, np.uint8)
+        out[:min(arr.size, L)] = arr[:L]
+        return out
+
+    lits = np.stack([pad_to(streams[i * N_STREAMS + S_LITERALS], a.block_size)
+                     for i in range(B)])
+    lens = np.stack([pad_to(streams[i * N_STREAMS + S_LENGTHS], 2 * max_cmds)
+                     for i in range(B)])
+    offs = np.stack([pad_to(streams[i * N_STREAMS + S_OFFSETS],
+                            off_planes * max_cmds) for i in range(B)])
+    cmds = np.stack([pad_to(streams[i * N_STREAMS + S_COMMANDS], 2 * max_cmds)
+                     for i in range(B)])
+    return {"literals": jnp.asarray(lits), "lengths": jnp.asarray(lens),
+            "offsets": jnp.asarray(offs), "commands": jnp.asarray(cmds)}
+
+
+# ------------------------------------------------------------------- decode
+def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
+                 block_size: int, max_cmds: int, backend: str,
+                 offset_bytes: int, total_size: Optional[int] = None):
+    from repro.kernels import ops, ref
+    lit_lens = _u16_from_planes(streams["commands"], n_cmds, max_cmds)
+    match_lens = _u16_from_planes(streams["lengths"], n_cmds, max_cmds)
+    if offset_bytes == 2:
+        offsets = _u16_from_planes(streams["offsets"], n_cmds, max_cmds)
+    else:
+        offsets = _u64lo_from_planes(streams["offsets"], n_cmds, max_cmds)
+
+    if da_mode == "ra":
+        return ops.lz77_decode_blocks(
+            lit_lens, match_lens, offsets, n_cmds, streams["literals"],
+            block_len, out_size=block_size, backend=backend)
+    # global/wavefront: one flat pointer space
+    B = lit_lens.shape[0]
+    lit_base = jnp.arange(B, dtype=jnp.int32) * streams["literals"].shape[1]
+    flat = ref.lz77_decode_global_ref(
+        lit_lens, match_lens, offsets, n_cmds, streams["literals"],
+        lit_base, block_start, block_len, out_size=block_size,
+        total_size=total_size)
+    return flat
+
+
+def _decode_sel_core(arrays, sel, da_meta, backend):
+    """Mode-2 block-selection decode (unjitted core — reused by the
+    shard_map multi-device path). `da_meta` is the static geometry tuple;
+    `arrays` the device archive pytree."""
+    (block_size, n_blocks, max_cmds, t_lit, t_cmd, mode, entropy,
+     offset_bytes, total_size, freqs_t) = da_meta
+    freqs_host = np.asarray(freqs_t, np.uint16)
+    da = DeviceArchive(
+        words=arrays["words"], word_off=arrays["word_off"],
+        n_syms=arrays["n_syms"], lanes=arrays["lanes"],
+        n_cmds=arrays["n_cmds"], block_start=arrays["block_start"],
+        block_len=arrays["block_len"], freqs=freqs_host,
+        block_size=block_size, n_blocks=n_blocks, raw_size=0, mode=mode,
+        entropy=entropy, max_cmds=max_cmds, t_max_lit=t_lit, t_max_cmd=t_cmd,
+        offset_bytes=offset_bytes)
+    streams = _entropy_decode_sel(da, sel, backend)
+    return _match_phase(mode, streams, da.n_cmds[sel], da.block_len[sel],
+                        da.block_start[sel], block_size, max_cmds, backend,
+                        offset_bytes, total_size)
+
+
+_decode_sel_jit = partial(jax.jit, static_argnames=("da_meta", "backend"))(
+    _decode_sel_core)
+
+
+class Decoder:
+    """Stateful wrapper: archive resident on device, jitted selection decode.
+
+    decode_blocks(sel) → (B, block_size) uint8 (Mode 2, device-resident)
+    decode_blocks_host_entropy(sel) → same, Mode 1
+    decode_all() / decode_range(lo, hi) → bytes (host copy, convenience)
+    """
+
+    def __init__(self, archive: Archive, backend: str = "auto"):
+        self.archive = archive
+        self.da = to_device(archive)
+        self.backend = backend
+        self._freqs_host = tuple(map(tuple, np.asarray(archive.freqs)))
+        self.arrays = {
+            "words": self.da.words, "word_off": self.da.word_off,
+            "n_syms": self.da.n_syms, "lanes": self.da.lanes,
+            "n_cmds": self.da.n_cmds, "block_start": self.da.block_start,
+            "block_len": self.da.block_len,
+        }
+
+    def _meta(self, n_sel: int):
+        da = self.da
+        total = da.n_blocks * da.block_size if da.mode == "global" else None
+        return (da.block_size, da.n_blocks, da.max_cmds, da.t_max_lit,
+                da.t_max_cmd, da.mode, da.entropy, da.offset_bytes, total,
+                self._freqs_host)
+
+    def decode_blocks(self, sel) -> jnp.ndarray:
+        sel = jnp.asarray(sel, jnp.int32)
+        if self.da.mode == "global":
+            # wavefront decode is whole-prefix by construction
+            flat = _decode_sel_jit(self.arrays,
+                                   jnp.arange(self.da.n_blocks,
+                                              dtype=jnp.int32),
+                                   self._meta(self.da.n_blocks), self.backend)
+            rows = flat.reshape(self.da.n_blocks, self.da.block_size)
+            return rows[sel]
+        return _decode_sel_jit(self.arrays, sel, self._meta(len(sel)),
+                               self.backend)
+
+    def decode_blocks_host_entropy(self, sel) -> jnp.ndarray:
+        """Mode 1: host entropy + device match."""
+        from repro.kernels import ops
+        sel = np.asarray(sel)
+        streams = _entropy_decode_host(self.archive, sel)
+        a = self.archive
+        total = int(a.n_blocks * a.block_size) if a.mode == "global" else None
+        out = _match_phase(
+            a.mode, streams, jnp.asarray(a.n_cmds[sel]),
+            jnp.asarray(a.block_len[sel]),
+            jnp.asarray(a.block_start[sel].astype(np.int32)),
+            a.block_size, int(a.n_cmds.max(initial=1)), self.backend,
+            a.offset_bytes, total)
+        if a.mode == "global":
+            return out.reshape(a.n_blocks, a.block_size)[sel]
+        return out
+
+    # ------------------------------------------------------------ host APIs
+    def decode_range(self, lo: int, hi: int, mode2: bool = True) -> np.ndarray:
+        """Decode output byte range [lo, hi) — touches only covering blocks."""
+        bs = self.da.block_size
+        b0, b1 = lo // bs, -(-hi // bs)
+        sel = np.arange(b0, min(b1, self.da.n_blocks))
+        rows = (self.decode_blocks(sel) if mode2
+                else self.decode_blocks_host_entropy(sel))
+        flat = np.asarray(rows).reshape(-1)
+        return flat[lo - b0 * bs: hi - b0 * bs]
+
+    def decode_all(self, chunk_blocks: Optional[int] = None,
+                   mode2: bool = True) -> np.ndarray:
+        """Whole-file decode; with chunk_blocks set, never materializes more
+        than one chunk of decompressed output at a time (paper §5 v7-RA)."""
+        nb = self.da.n_blocks
+        if chunk_blocks is None:
+            chunk_blocks = nb
+        parts = []
+        for b0 in range(0, nb, chunk_blocks):
+            sel = np.arange(b0, min(b0 + chunk_blocks, nb))
+            rows = (self.decode_blocks(sel) if mode2
+                    else self.decode_blocks_host_entropy(sel))
+            parts.append(np.asarray(rows).reshape(-1))
+        out = np.concatenate(parts)[:self.da.raw_size]
+        return out

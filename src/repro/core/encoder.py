@@ -1,0 +1,167 @@
+"""ACEAPEX encoder (host, numpy, encode-once/decode-many).
+
+Pipeline: partition output space into blocks → match search (per-block in
+"ra" mode, global in "global"/wavefront mode) → greedy parse → four byte
+streams per block → archive-global entropy tables → one batched rANS encode
+over every stream of every block.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import entropy as ent
+from repro.core import match_search as ms
+from repro.core.format import (DEFAULT_BLOCK_SIZE, MAX_LEN, N_STREAMS,
+                               S_COMMANDS, S_LENGTHS, S_LITERALS, S_OFFSETS,
+                               Archive, fnv1a64_u64_stride)
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_U64 = (1 << 64) - 1
+
+
+def _file_digest(block_fnv: np.ndarray) -> int:
+    h = _FNV_OFFSET
+    for d in block_fnv.tolist():
+        h = ((h ^ int(d)) * _FNV_PRIME) & _U64
+    return h
+
+
+def _planes_u16(vals: np.ndarray) -> np.ndarray:
+    v = vals.astype(np.uint32)
+    return np.concatenate([(v & 0xFF).astype(np.uint8),
+                           (v >> 8).astype(np.uint8)])
+
+
+def _planes_u64(vals: np.ndarray) -> np.ndarray:
+    v = vals.astype(np.uint64)
+    return np.concatenate([((v >> np.uint64(8 * b)) & np.uint64(0xFF)).astype(np.uint8)
+                           for b in range(8)])
+
+
+def encode(data: bytes | np.ndarray,
+           block_size: int = DEFAULT_BLOCK_SIZE,
+           mode: str = "ra",
+           entropy: str = "rans",
+           hash_bits: int = 17) -> Archive:
+    """Compress `data` into an ACEAPEX archive."""
+    data = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray)) \
+        else np.ascontiguousarray(data, np.uint8)
+    n = data.shape[0]
+    n_blocks = max(1, -(-n // block_size))
+    block_start = (np.arange(n_blocks, dtype=np.int64) * block_size)
+    block_len = np.minimum(n - block_start, block_size).astype(np.int32)
+    block_len = np.maximum(block_len, 0)
+
+    if mode == "global":
+        g_cand, g_mlen = ms.find_matches(data, base=0, hash_bits=hash_bits)
+
+    streams: List[np.ndarray] = []
+    class_ids: List[int] = []
+    n_cmds = np.zeros(n_blocks, np.int32)
+    block_fnv = np.zeros(n_blocks, np.uint64)
+
+    for b in range(n_blocks):
+        s, ln = int(block_start[b]), int(block_len[b])
+        blk = data[s:s + ln]
+        block_fnv[b] = np.uint64(fnv1a64_u64_stride(blk))
+        if mode == "ra":
+            cand, mlen = ms.find_matches(blk, base=0, hash_bits=hash_bits)
+            tokens = ms.greedy_parse(ln, cand, mlen)
+        else:
+            # global candidates; cap match dest inside this block
+            c = g_cand[s:s + ln].copy()
+            m = g_mlen[s:s + ln].copy()
+            m = np.minimum(m, ln - np.arange(ln))
+            m = np.where(m >= ms.MIN_MATCH, m, 0)
+            tokens = [(ll, ml, src) for (ll, ml, src)
+                      in ms.greedy_parse(ln, np.where(m > 0, c, -1), m)]
+
+        lit_lens: List[int] = []
+        mlens: List[int] = []
+        offs: List[int] = []
+        lit_chunks: List[np.ndarray] = []
+        cur = 0
+        for (ll, ml, src) in tokens:
+            if ll:
+                lit_chunks.append(blk[cur:cur + ll])
+            cur += ll + ml
+            while ll > MAX_LEN:
+                lit_lens.append(MAX_LEN)
+                mlens.append(0)
+                offs.append(0)
+                ll -= MAX_LEN
+            lit_lens.append(ll)
+            mlens.append(ml)
+            if ml:
+                # "ra": src is already block-local (find_matches base=0);
+                # "global": src is absolute
+                offs.append(src)
+            else:
+                offs.append(0)
+        assert cur == ln, f"parse covered {cur} of {ln}"
+        n_cmds[b] = len(lit_lens)
+
+        literals = (np.concatenate(lit_chunks) if lit_chunks
+                    else np.zeros(0, np.uint8))
+        ll_a = np.asarray(lit_lens, np.uint32)
+        ml_a = np.asarray(mlens, np.uint32)
+        of_a = np.asarray(offs, np.uint64)
+        streams.append(literals)
+        class_ids.append(S_LITERALS)
+        streams.append(_planes_u16(ml_a))
+        class_ids.append(S_LENGTHS)
+        streams.append(_planes_u16(of_a) if mode == "ra" else _planes_u64(of_a))
+        class_ids.append(S_OFFSETS)
+        streams.append(_planes_u16(ll_a))
+        class_ids.append(S_COMMANDS)
+
+    # archive-global entropy tables, one per stream class
+    hists = np.zeros((N_STREAMS, 256), np.int64)
+    for st, c in zip(streams, class_ids):
+        if st.size:
+            hists[c] += np.bincount(st, minlength=256)
+    freqs = np.stack([ent.normalize_freqs(hists[c]) for c in range(N_STREAMS)])
+
+    if entropy == "rans":
+        words, w_off, n_words, n_syms, lanes = ent.rans_encode_batch(
+            streams, class_ids, freqs)
+    elif entropy == "raw":
+        # uncompressed byte-pack fallback (2 bytes/word) — the "other entropy
+        # backend" used by the §6.4-style backend comparison
+        sizes = np.array([st.size for st in streams], np.int64)
+        n_words = (-(-sizes // 2)).astype(np.int32)
+        w_off = np.concatenate([[0], np.cumsum(n_words[:-1])]).astype(np.int64)
+        words = np.zeros(int(n_words.sum()), np.uint16)
+        for i, st in enumerate(streams):
+            p = st if st.size % 2 == 0 else np.concatenate(
+                [st, np.zeros(1, np.uint8)])
+            words[w_off[i]:w_off[i] + n_words[i]] = (
+                p[0::2].astype(np.uint16) | (p[1::2].astype(np.uint16) << 8))
+        n_syms = sizes.astype(np.int32)
+        lanes = np.ones(len(streams), np.int32)
+    else:
+        raise ValueError(f"unknown entropy backend {entropy!r}")
+
+    S = len(streams)
+    assert S == N_STREAMS * n_blocks
+    return Archive(
+        block_size=block_size,
+        raw_size=n,
+        mode=mode,
+        entropy=entropy,
+        freqs=freqs,
+        words=words,
+        word_off=np.asarray(w_off, np.int64).reshape(n_blocks, N_STREAMS),
+        n_words=np.asarray(n_words, np.int32).reshape(n_blocks, N_STREAMS),
+        n_syms=np.asarray(n_syms, np.int32).reshape(n_blocks, N_STREAMS),
+        lanes=np.asarray(lanes, np.int32).reshape(n_blocks, N_STREAMS),
+        n_cmds=n_cmds,
+        block_start=block_start,
+        block_len=block_len,
+        block_fnv=block_fnv,
+        file_fnv=_file_digest(block_fnv),
+        offset_bytes=2 if mode == "ra" else 8,
+    )

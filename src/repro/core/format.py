@@ -1,0 +1,223 @@
+"""ACEAPEX archive format — absolute-offset LZ77 with self-contained blocks.
+
+Layout (all sizes 64-bit; the 4 GB uint32 overflow fix of paper §5 is a
+format-level invariant here):
+
+  Archive
+    ├── meta: block_size, mode ("ra" self-contained | "global" wavefront),
+    │         raw_size, n_blocks, entropy backend, FNV-1a-64 digests
+    ├── entropy tables: 4 stream classes × 256 freqs (normalized to 1<<12)
+    ├── words: one flat uint16 buffer holding every rANS-coded stream
+    │          (each stream region starts with its K initial lane states
+    │           as 2·K little-endian uint16 words)
+    └── per-(block, stream) table
+          word_off  int64   offset into `words`
+          n_words   int32   data words (excludes the 2·K state words)
+          n_syms    int32   decoded byte count
+          lanes     int32   K — rANS interleave factor for this stream
+
+Four streams per block (paper §2): LITERALS, LENGTHS (match-length byte
+planes), OFFSETS (absolute-offset byte planes), COMMANDS (literal-run-length
+byte planes).  Command j ≡ (lit_len[j], match_len[j], offset[j]); the
+command sequence is the strict alternation literal-run → match with zero
+lengths permitted, so COMMANDS carries the lit-run lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------- constants
+DEFAULT_BLOCK_SIZE = 16 * 1024       # paper §2.1: 16 KB seek optimum
+PAPER1_BLOCK_SIZE = 1024 * 1024      # paper-1 bulk-throughput tuning
+
+MIN_MATCH = 4                        # below this a match is not worth a cmd
+MAX_LEN = 0xFFFF                     # u16 length planes; longer runs split
+
+PROB_BITS = 12                       # rANS probability resolution
+PROB_SCALE = 1 << PROB_BITS
+RANS_L = 1 << 16                     # state lower bound (16-bit renorm)
+MAX_LANES = 32                       # K_max — lane-interleave ceiling
+
+# stream ids
+S_LITERALS = 0
+S_LENGTHS = 1
+S_OFFSETS = 2
+S_COMMANDS = 3
+N_STREAMS = 4
+STREAM_NAMES = ("literals", "lengths", "offsets", "commands")
+
+FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def fnv1a64(data: np.ndarray) -> int:
+    """Reference FNV-1a-64 over bytes (host path; sequential by definition)."""
+    h = int(FNV_OFFSET)
+    prime = int(FNV_PRIME)
+    mask = (1 << 64) - 1
+    for b in memoryview(np.ascontiguousarray(data, dtype=np.uint8)).tobytes():
+        h = ((h ^ b) * prime) & mask
+    return h
+
+
+def fnv1a64_u64_stride(data: np.ndarray) -> int:
+    """FNV-1a-64 over the byte buffer folded to u64 words (8-byte stride).
+
+    This is the device-path digest (paper uses FNV for GPU paths): the same
+    recurrence applied per 8-byte word, which vectorizes as a scan on-device.
+    Input is zero-padded to a multiple of 8 bytes.
+    """
+    b = np.ascontiguousarray(data, dtype=np.uint8)
+    pad = (-b.size) % 8
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    words = b.view(np.uint64)
+    h = int(FNV_OFFSET)
+    prime = int(FNV_PRIME)
+    mask = (1 << 64) - 1
+    for w in words.tolist():
+        h = ((h ^ int(w)) * prime) & mask
+    return h
+
+
+def lanes_for(n_syms: int, k_max: int = MAX_LANES) -> int:
+    """Adaptive interleave factor: small streams get few lanes so the K
+    initial states (4·K bytes) do not dominate the compressed size."""
+    if n_syms <= 0:
+        return 1
+    k = 1
+    while k * 2 <= k_max and n_syms >= 16 * k * 2:
+        k *= 2
+    return k
+
+
+# ---------------------------------------------------------------- containers
+@dataclasses.dataclass
+class BlockStreams:
+    """Raw (pre-entropy) streams of one block."""
+    literals: np.ndarray     # u8[n_lit]
+    lit_lens: np.ndarray     # u32[n_cmds]
+    match_lens: np.ndarray   # u32[n_cmds]
+    offsets: np.ndarray      # u64[n_cmds]  absolute output positions
+
+    @property
+    def n_cmds(self) -> int:
+        return int(self.lit_lens.shape[0])
+
+
+@dataclasses.dataclass
+class Archive:
+    """A compressed archive. Everything is flat numpy so it ships to device
+    as-is (jnp.asarray of each field) for the device-resident pipeline."""
+    block_size: int
+    raw_size: int                 # int (u64 semantics)
+    mode: str                     # "ra" | "global"
+    entropy: str                  # "rans" | "raw"
+    freqs: np.ndarray             # u16[N_STREAMS, 256] normalized to PROB_SCALE
+    words: np.ndarray             # u16[total_words]
+    word_off: np.ndarray          # i64[n_blocks, N_STREAMS]
+    n_words: np.ndarray           # i32[n_blocks, N_STREAMS]
+    n_syms: np.ndarray            # i32[n_blocks, N_STREAMS]
+    lanes: np.ndarray             # i32[n_blocks, N_STREAMS]
+    n_cmds: np.ndarray            # i32[n_blocks]
+    block_start: np.ndarray       # i64[n_blocks]  absolute output start
+    block_len: np.ndarray         # i32[n_blocks]
+    block_fnv: np.ndarray         # u64[n_blocks] digest of decoded block (8B-stride)
+    file_fnv: int                 # digest over block digests
+    offset_bytes: int = 2         # bytes per offset plane count ("ra"=2, "global"=8)
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.block_start.shape[0])
+
+    @property
+    def compressed_bytes(self) -> int:
+        """On-the-wire size: words + tables + headers (what VRAM residency costs)."""
+        return (self.words.size * 2
+                + self.freqs.size * 2
+                + self.word_off.size * 8
+                + self.n_words.size * 4
+                + self.n_syms.size * 4
+                + self.lanes.size * 4
+                + self.n_cmds.size * 4
+                + self.block_start.size * 8
+                + self.block_len.size * 4
+                + self.block_fnv.size * 8
+                + 64)  # fixed header
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_size / max(1, self.compressed_bytes)
+
+
+MAGIC = b"ACEJAX02"
+
+
+def serialize(a: Archive) -> bytes:
+    """Flat binary serialization. All size/offset fields are u64 — the
+    paper §5 overflow fix (u32 size fields migrated to 64-bit) is enforced
+    at the format level."""
+    import struct
+    head = struct.pack(
+        "<8sQQQQB3xB3xQ",
+        MAGIC, a.block_size, a.raw_size, a.n_blocks, a.words.size,
+        {"ra": 0, "global": 1}[a.mode], {"rans": 0, "raw": 1}[a.entropy],
+        a.file_fnv,
+    )
+    parts = [head, struct.pack("<Q", a.offset_bytes)]
+    for arr, dt in (
+        (a.freqs, np.uint16), (a.words, np.uint16), (a.word_off, np.int64),
+        (a.n_words, np.int32), (a.n_syms, np.int32), (a.lanes, np.int32),
+        (a.n_cmds, np.int32), (a.block_start, np.int64),
+        (a.block_len, np.int32), (a.block_fnv, np.uint64),
+    ):
+        raw = np.ascontiguousarray(arr, dtype=dt).tobytes()
+        parts.append(struct.pack("<Q", len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def deserialize(buf: bytes) -> Archive:
+    import struct
+    off = 0
+
+    def take(n):
+        nonlocal off
+        out = buf[off:off + n]
+        off += n
+        return out
+
+    head = take(struct.calcsize("<8sQQQQB3xB3xQ"))
+    magic, block_size, raw_size, n_blocks, n_words_total, mode_b, ent_b, file_fnv = \
+        struct.unpack("<8sQQQQB3xB3xQ", head)
+    if magic != MAGIC:
+        raise ValueError(f"bad magic {magic!r}")
+    (offset_bytes,) = struct.unpack("<Q", take(8))
+
+    def arr(dt, shape):
+        (nb,) = struct.unpack("<Q", take(8))
+        a = np.frombuffer(take(nb), dtype=dt).copy()
+        return a.reshape(shape)
+
+    freqs = arr(np.uint16, (N_STREAMS, 256))
+    words = arr(np.uint16, (-1,))
+    word_off = arr(np.int64, (n_blocks, N_STREAMS))
+    n_words = arr(np.int32, (n_blocks, N_STREAMS))
+    n_syms = arr(np.int32, (n_blocks, N_STREAMS))
+    lanes = arr(np.int32, (n_blocks, N_STREAMS))
+    n_cmds = arr(np.int32, (n_blocks,))
+    block_start = arr(np.int64, (n_blocks,))
+    block_len = arr(np.int32, (n_blocks,))
+    block_fnv = arr(np.uint64, (n_blocks,))
+    return Archive(
+        block_size=block_size, raw_size=raw_size,
+        mode={0: "ra", 1: "global"}[mode_b],
+        entropy={0: "rans", 1: "raw"}[ent_b],
+        freqs=freqs, words=words, word_off=word_off, n_words=n_words,
+        n_syms=n_syms, lanes=lanes, n_cmds=n_cmds, block_start=block_start,
+        block_len=block_len, block_fnv=block_fnv, file_fnv=file_fnv,
+        offset_bytes=int(offset_bytes),
+    )

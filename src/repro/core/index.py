@@ -1,0 +1,107 @@
+"""Read-level random-access indices (paper §4.1).
+
+ReadIndex   — 8 bytes/read: the absolute output byte where the read starts
+              (block id + in-block offset fall out arithmetically, and the
+              read's extent is delimited by the next entry). This is the
+              compact read→block index the paper sizes against `.fai`.
+FaiIndex    — a faithful `samtools faidx`-style FASTQ index (text: NAME,
+              LENGTH, OFFSET, LINEBASES, LINEWIDTH, QUALOFFSET per record)
+              used as the size/latency baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def parse_fastq_records(data: bytes) -> Tuple[np.ndarray, List[bytes]]:
+    """Record start offsets (u64[n_reads+1], sentinel end) + read names."""
+    arr = np.frombuffer(data, np.uint8)
+    nl = np.flatnonzero(arr == ord(b"\n"))
+    if nl.size % 4:
+        raise ValueError("truncated FASTQ (line count not a multiple of 4)")
+    line_starts = np.concatenate([[0], nl[:-1] + 1])
+    rec_starts = line_starts[0::4]
+    names = []
+    for s in rec_starts:
+        e = data.index(b"\n", s)
+        names.append(data[s + 1:e].split(b" ")[0])
+    starts = np.concatenate([rec_starts, [len(data)]]).astype(np.uint64)
+    return starts, names
+
+
+@dataclasses.dataclass
+class ReadIndex:
+    """8 B/read: absolute start offset. Block = start // block_size."""
+    starts: np.ndarray            # u64[n_reads + 1]
+    block_size: int
+
+    @property
+    def n_reads(self) -> int:
+        return int(self.starts.shape[0] - 1)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_reads * 8    # on-disk cost (sentinel amortized away)
+
+    def lookup(self, r: int) -> Tuple[int, int, int]:
+        """→ (start_byte, end_byte, first_block). O(1) array loads."""
+        s = int(self.starts[r])
+        e = int(self.starts[r + 1])
+        return s, e, s // self.block_size
+
+    def covering_blocks(self, r: int) -> Tuple[int, int]:
+        s, e, b0 = self.lookup(r)
+        return b0, -(-e // self.block_size)
+
+    def serialize(self) -> bytes:
+        return self.starts[:-1].astype("<u8").tobytes()
+
+    @classmethod
+    def build(cls, data: bytes, block_size: int) -> "ReadIndex":
+        starts, _ = parse_fastq_records(data)
+        return cls(starts=starts, block_size=block_size)
+
+    @classmethod
+    def fixed_records(cls, n_records: int, record_bytes: int,
+                      block_size: int) -> "ReadIndex":
+        """Index for fixed-size records (the tokenized-corpus case)."""
+        starts = (np.arange(n_records + 1, dtype=np.uint64)
+                  * np.uint64(record_bytes))
+        return cls(starts=starts, block_size=block_size)
+
+
+@dataclasses.dataclass
+class FaiIndex:
+    """`.fai`-style FASTQ index (the baseline the paper compares against)."""
+    text: bytes
+    entries: Dict[bytes, Tuple[int, int, int, int, int]]
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.text)
+
+    def lookup(self, name: bytes):
+        return self.entries[name]
+
+    @classmethod
+    def build(cls, data: bytes) -> "FaiIndex":
+        starts, names = parse_fastq_records(data)
+        lines = []
+        entries = {}
+        for i, name in enumerate(names):
+            s, e = int(starts[i]), int(starts[i + 1])
+            rec = data[s:e]
+            l1 = rec.index(b"\n")
+            seq_off = s + l1 + 1
+            l2 = rec.index(b"\n", l1 + 1)
+            seq_len = l2 - (l1 + 1)
+            l3 = rec.index(b"\n", l2 + 1)
+            qual_off = s + l3 + 1
+            entry = (seq_len, seq_off, seq_len, seq_len + 1, qual_off)
+            entries[name] = entry
+            lines.append(b"\t".join(
+                [name] + [str(x).encode() for x in entry]) + b"\n")
+        return cls(text=b"".join(lines), entries=entries)

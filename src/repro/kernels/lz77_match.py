@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: LZ77 match resolution for self-contained blocks.
+
+One grid step decodes one block entirely in VMEM (DESIGN.md §3.1):
+
+  expansion      scatter(+1 at command ends) → cumsum → gathers
+  overlap fold   modulo trick (self-overlapping matches never cycle)
+  resolution     ⌈log2(block)⌉ pointer-doubling gather rounds
+  payout         one literal-table gather
+
+VMEM working set per block ≈ block·(1 B out + 4 B ptr + 1 B literals)
++ 3·max_cmds·4 B ≈ 130 KB at 16 KB blocks — far under the ~16 MB budget, so
+several blocks per grid step is the natural occupancy lever (the grid is the
+seek-granularity axis: a 1-block seek is a 1-step grid).
+
+On a real TPU the scatter/gather here lower to VMEM dynamic-slice loops via
+Mosaic; correctness is validated in interpret mode against `ref.py`
+(tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_block_kernel(lit_lens_ref, match_lens_ref, offsets_ref,
+                         n_cmds_ref, literals_ref, block_len_ref, out_ref,
+                         *, out_size: int, n_rounds: int):
+    C = lit_lens_ref.shape[1]
+    ll = lit_lens_ref[0, :].astype(jnp.int32)
+    ml = match_lens_ref[0, :].astype(jnp.int32)
+    off = offsets_ref[0, :].astype(jnp.int32)
+    n_cmds = n_cmds_ref[0, 0]
+    blen = block_len_ref[0, 0]
+    lits = literals_ref[0, :]
+
+    cmd_ids = jax.lax.iota(jnp.int32, C)
+    valid = cmd_ids < n_cmds
+    ll = jnp.where(valid, ll, 0)
+    ml = jnp.where(valid, ml, 0)
+
+    tot = ll + ml
+    cum_tot = jnp.cumsum(tot)
+    P = cum_tot - tot
+    cum_lit = jnp.cumsum(ll) - ll
+
+    # command-of-byte: scatter command-end marks, then cumsum
+    ends = jnp.where(valid, jnp.minimum(cum_tot, out_size), out_size)
+    marks = jnp.zeros((out_size + 1,), jnp.int32)
+    marks = marks.at[ends].add(jnp.where(valid, 1, 0))
+    cmd_of = jnp.minimum(jnp.cumsum(marks)[:out_size], C - 1)
+
+    i = jax.lax.iota(jnp.int32, out_size)
+    rel = i - P[cmd_of]
+    is_lit = rel < ll[cmd_of]
+    lit_idx = cum_lit[cmd_of] + rel
+    mstart = P[cmd_of] + ll[cmd_of]
+    d = jnp.maximum(mstart - off[cmd_of], 1)
+    k = rel - ll[cmd_of]
+    ptr = jnp.where(is_lit, -(lit_idx + 1), off[cmd_of] + jnp.remainder(k, d))
+    ptr = jnp.where(i < blen, ptr, -1)
+
+    def body(_, p):
+        nxt = p[jnp.clip(p, 0, out_size - 1)]
+        return jnp.where(p >= 0, nxt, p)
+
+    ptr = jax.lax.fori_loop(0, n_rounds, body, ptr)
+    li = jnp.clip(-ptr - 1, 0, lits.shape[0] - 1)
+    out_ref[0, :] = lits[li]
+
+
+@functools.partial(jax.jit, static_argnames=("out_size", "interpret"))
+def lz77_decode_blocks_pallas(lit_lens, match_lens, offsets, n_cmds, literals,
+                              block_len, out_size: int, interpret: bool = True):
+    """Batched block decode: (B, Cmax) command planes + (B, L) literals →
+    (B, out_size) bytes. Grid = blocks."""
+    B, C = lit_lens.shape
+    L = literals.shape[1]
+    n_rounds = max(1, int(np.ceil(np.log2(max(out_size, 2)))))
+    kernel = functools.partial(_decode_block_kernel, out_size=out_size,
+                               n_rounds=n_rounds)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, L), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_size), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, out_size), jnp.uint8),
+        interpret=interpret,
+    )(lit_lens.astype(jnp.int32), match_lens.astype(jnp.int32),
+      offsets.astype(jnp.int32), n_cmds.reshape(B, 1).astype(jnp.int32),
+      literals.astype(jnp.uint8), block_len.reshape(B, 1).astype(jnp.int32))

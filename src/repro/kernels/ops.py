@@ -1,0 +1,59 @@
+"""jit'd wrappers over the Pallas kernels with backend dispatch.
+
+backend:
+  "ref"     — pure-jnp oracle (fast on CPU; what XLA fuses on TPU anyway)
+  "pallas"  — pl.pallas_call; interpret=True off-TPU (validation mode)
+  "auto"    — "pallas" on TPU, "ref" elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:   # pragma: no cover
+        return False
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def lz77_decode_blocks(lit_lens, match_lens, offsets, n_cmds, literals,
+                       block_len, out_size: int, backend: str = "auto"):
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.lz77_decode_blocks_ref(
+            lit_lens, match_lens, offsets, n_cmds, literals, block_len,
+            out_size)
+    from repro.kernels.lz77_match import lz77_decode_blocks_pallas
+    return lz77_decode_blocks_pallas(
+        lit_lens, match_lens, offsets, n_cmds, literals, block_len,
+        out_size=out_size, interpret=not _on_tpu())
+
+
+def rans_decode(words, word_off, n_syms, lanes, class_ids, freqs,
+                t_max: int, backend: str = "auto", k_max: int = 32,
+                group: int = 8):
+    """→ (rows (S, t_max*k_max) u8 step-major, T per-stream steps)."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.rans_decode_ref(words, word_off, n_syms, lanes,
+                                    class_ids, freqs, k_max=k_max,
+                                    t_max=t_max)
+    from repro.kernels.rans_decode import rans_decode_pallas
+    freqs_t = tuple(map(tuple, np.asarray(freqs).tolist()))
+    rows = rans_decode_pallas(words, word_off, n_syms, lanes, class_ids,
+                              freqs_t, t_max=t_max, k_max=k_max, group=group,
+                              interpret=not _on_tpu())
+    n = jnp.asarray(n_syms, jnp.int32)
+    K = jnp.maximum(jnp.asarray(lanes, jnp.int32), 1)
+    return rows, jnp.where(n > 0, -(-n // K), 0)

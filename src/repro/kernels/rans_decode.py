@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: lane-interleaved rANS decode (DESIGN.md §3.2).
+
+One grid step decodes a GROUP of streams in lockstep: states are a
+(group, k_max) uint32 tile; each of T steps does table gathers (symbol /
+freq / cum live in VMEM — 4·(256+256+4096)·4 B ≈ 74 KB), then turns the
+renormalization mask into per-lane word offsets with a lane-axis cumsum
+(the warp-ballot idiom as a VPU prefix sum) and gathers 16-bit words from
+the shared stream cursor.
+
+The full `words` buffer is passed whole (memory_space=ANY semantics): word
+offsets of a block selection are scattered across the archive, so the
+production TPU kernel would scalar-prefetch per-stream offsets and DMA each
+stream segment HBM→VMEM; in interpret mode the gather indexes the array
+directly. This is the documented deviation between the validated kernel and
+the production lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.format import PROB_BITS, PROB_SCALE, RANS_L
+
+_MASK = PROB_SCALE - 1
+
+
+def _rans_group_kernel(words_ref, woff_ref, nsym_ref, lanes_ref, cls_ref,
+                       freqs_ref, cum_ref, sym_ref, out_ref,
+                       *, t_max: int, k_max: int, group: int):
+    W = words_ref.shape[0]
+    woff = woff_ref[0, :]                       # (G,)
+    nsym = nsym_ref[0, :]
+    K = jnp.maximum(lanes_ref[0, :], 1)
+    cls = cls_ref[0, :]
+    T = jnp.where(nsym > 0, -(-nsym // K), 0)   # per-stream step count
+
+    lane = jax.lax.iota(jnp.int32, k_max)[None, :]
+    lane_ok = lane < K[:, None]
+    st_idx = jnp.clip(woff[:, None] + 2 * jnp.minimum(lane, K[:, None] - 1),
+                      0, W - 2)
+    lo = words_ref[st_idx].astype(jnp.uint32)
+    hi = words_ref[st_idx + 1].astype(jnp.uint32)
+    states0 = lo | (hi << 16)
+    data_off = woff + 2 * K
+
+    def step(t, carry):
+        states, cursor = carry
+        active = lane_ok & (t < T)[:, None]
+        slot = (states & _MASK).astype(jnp.int32)
+        s_t = sym_ref[cls[:, None], slot]
+        F = freqs_ref[cls[:, None], s_t].astype(jnp.uint32)
+        C = cum_ref[cls[:, None], s_t].astype(jnp.uint32)
+        x = F * (states >> PROB_BITS) + slot.astype(jnp.uint32) - C
+        renorm = active & (x < RANS_L)
+        within = jnp.cumsum(renorm.astype(jnp.int32), axis=1) - renorm
+        widx = jnp.clip(data_off[:, None] + cursor[:, None] + within, 0, W - 1)
+        w = words_ref[widx].astype(jnp.uint32)
+        x = jnp.where(renorm, (x << 16) | w, x)
+        states = jnp.where(active, x, states)
+        cursor = cursor + renorm.sum(axis=1, dtype=jnp.int32)
+        out_ref[:, pl.dslice(t * k_max, k_max)] = jnp.where(
+            active, s_t, 0).astype(jnp.uint8)
+        return states, cursor
+
+    jax.lax.fori_loop(0, t_max, step,
+                      (states0, jnp.zeros((group,), jnp.int32)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("freqs_host_tuple", "t_max", "k_max",
+                                    "group", "interpret"))
+def rans_decode_pallas(words, word_off, n_syms, lanes, class_ids,
+                       freqs_host_tuple, t_max: int, k_max: int = 32,
+                       group: int = 8, interpret: bool = True):
+    """Decode S streams → (S, t_max*k_max) step-major bytes (cf. ref.py)."""
+    from repro.core.entropy import build_tables
+    freqs_np = np.asarray(freqs_host_tuple, np.uint32)
+    cum_np, sym_np = build_tables(freqs_np)
+
+    S = word_off.shape[0]
+    G = -(-S // group)
+    pad = G * group - S
+
+    def padarr(x, fill=0):
+        x = jnp.asarray(x, jnp.int32)
+        return jnp.concatenate([x, jnp.full((pad,), fill, jnp.int32)]) \
+            if pad else x
+
+    woff = padarr(word_off).reshape(G, group)
+    nsym = padarr(n_syms).reshape(G, group)
+    lns = padarr(lanes, 1).reshape(G, group)
+    cls = padarr(class_ids).reshape(G, group)
+
+    kernel = functools.partial(_rans_group_kernel, t_max=max(t_max, 1),
+                               k_max=k_max, group=group)
+    out = pl.pallas_call(
+        kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec(words.shape, lambda g: (0,)),          # shared words
+            pl.BlockSpec((1, group), lambda g: (g, 0)),
+            pl.BlockSpec((1, group), lambda g: (g, 0)),
+            pl.BlockSpec((1, group), lambda g: (g, 0)),
+            pl.BlockSpec((1, group), lambda g: (g, 0)),
+            pl.BlockSpec(freqs_np.shape, lambda g: (0, 0)),     # tables
+            pl.BlockSpec(cum_np.shape, lambda g: (0, 0)),
+            pl.BlockSpec(sym_np.shape, lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, max(t_max, 1) * k_max),
+                               lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G * group, max(t_max, 1) * k_max),
+                                       jnp.uint8),
+        interpret=interpret,
+    )(jnp.asarray(words, jnp.uint16), woff, nsym, lns, cls,
+      jnp.asarray(freqs_np), jnp.asarray(cum_np), jnp.asarray(sym_np))
+    return out[:S]

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for the Pallas kernels (DESIGN.md §3.1).
+
+The LZ77 match phase is re-derived for a vector machine: command expansion is
+a scatter + cumsum (no searchsorted — maps 1:1 onto the kernel body), match
+self-overlap folds via the modulo trick, and cross-command dependencies
+resolve with pointer doubling — ⌈log2(block)⌉ dense gathers instead of the
+GPU's warp-serial copies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_pointers(lit_lens, match_lens, offsets, n_cmds, block_len,
+                    out_size: int, base=0):
+    """Per-output-byte source pointers for ONE block.
+
+    `offsets` and the returned match pointers live in the coordinate space
+    `base + local`: base=0 with block-local offsets ("ra" blocks), or
+    base=block_start with absolute offsets ("global"/wavefront mode).
+
+    Returns int32[out_size]: ptr >= 0 → copy from output position ptr;
+    ptr < 0 → literal index -(ptr+1). Bytes >= block_len get literal 0.
+    """
+    C = lit_lens.shape[0]
+    lit_lens = lit_lens.astype(jnp.int32)
+    match_lens = match_lens.astype(jnp.int32)
+    offsets = offsets.astype(jnp.int32)
+    cmd_ids = jnp.arange(C, dtype=jnp.int32)
+    valid_cmd = cmd_ids < n_cmds
+    ll = jnp.where(valid_cmd, lit_lens, 0)
+    ml = jnp.where(valid_cmd, match_lens, 0)
+
+    tot = ll + ml
+    cum_tot = jnp.cumsum(tot)                      # command end positions
+    P = cum_tot - tot                              # command start positions
+    cum_lit = jnp.cumsum(ll) - ll                  # literal base per command
+
+    # command-of-byte via scatter(+1 at command ends) then cumsum
+    marks = jnp.zeros(out_size + 1, jnp.int32)
+    ends = jnp.where(valid_cmd, jnp.minimum(cum_tot, out_size), out_size)
+    marks = marks.at[ends].add(jnp.where(valid_cmd, 1, 0))
+    cmd_of = jnp.cumsum(marks)[:out_size]          # int32[out_size]
+    cmd_of = jnp.minimum(cmd_of, C - 1)
+
+    i = jnp.arange(out_size, dtype=jnp.int32)
+    rel = i - P[cmd_of]
+    is_lit = rel < ll[cmd_of]
+    lit_idx = cum_lit[cmd_of] + rel
+    # match source with self-overlap folding (dest start in `base` coords)
+    mstart = base + P[cmd_of] + ll[cmd_of]
+    d = jnp.maximum(mstart - offsets[cmd_of], 1)   # distance >= 1
+    k = rel - ll[cmd_of]
+    mptr = offsets[cmd_of] + jnp.remainder(k, d)
+    ptr = jnp.where(is_lit, -(lit_idx + 1), mptr)
+    ptr = jnp.where(i < block_len, ptr, -1)        # pad bytes → literal 0
+    return ptr
+
+
+def resolve_pointers(ptr, literals, n_rounds: int):
+    """Pointer doubling + literal payout for ONE block."""
+    def body(_, p):
+        nxt = p[jnp.clip(p, 0, p.shape[0] - 1)]
+        return jnp.where(p >= 0, nxt, p)
+
+    ptr = jax.lax.fori_loop(0, n_rounds, body, ptr)
+    lit_idx = jnp.clip(-ptr - 1, 0, literals.shape[0] - 1)
+    return literals[lit_idx]
+
+
+def lz77_decode_block_ref(lit_lens, match_lens, offsets, n_cmds, literals,
+                          block_len, out_size: int):
+    """Decode ONE self-contained block (oracle for the Pallas kernel)."""
+    n_rounds = max(1, int(np.ceil(np.log2(max(out_size, 2)))))
+    ptr = expand_pointers(lit_lens, match_lens, offsets, n_cmds, block_len,
+                          out_size)
+    return resolve_pointers(ptr, literals, n_rounds)
+
+
+def lz77_decode_blocks_ref(lit_lens, match_lens, offsets, n_cmds, literals,
+                           block_len, out_size: int):
+    """vmapped multi-block decode: args batched on axis 0."""
+    fn = lambda a, b, c, d, e, f: lz77_decode_block_ref(a, b, c, d, e, f,
+                                                        out_size)
+    return jax.vmap(fn)(lit_lens, match_lens, offsets, n_cmds, literals,
+                        block_len)
+
+
+def lz77_decode_global_ref(lit_lens, match_lens, offsets, n_cmds, literals,
+                           lit_base, block_start, block_len, out_size: int,
+                           total_size: int):
+    """Wavefront-generalized decode: ALL blocks' pointers in one flat output
+    space, offsets absolute — chains may cross blocks; ⌈log2(total)⌉ global
+    gather rounds replace the GPU wavefront schedule (DESIGN.md §3.3).
+
+    literals: (B, max_lit) per-block literal arrays; lit_base: global literal
+    index base per block (exclusive cumsum of literal counts).
+    """
+    B = lit_lens.shape[0]
+
+    def one(ll, mlen, off, nc, bstart, blen, lbase):
+        ptr = expand_pointers(ll, mlen, off, nc, blen, out_size, base=bstart)
+        # matches already point at absolute positions (base=bstart above);
+        # literals shift by the block's global literal base.
+        i_local = jnp.arange(out_size, dtype=jnp.int32)
+        is_lit = ptr < 0
+        gl = -(jnp.where(is_lit, ptr, -1) + 1) + lbase
+        gptr = jnp.where(is_lit, -(gl + 1), ptr)
+        valid = i_local < blen
+        return jnp.where(valid, gptr, -1)
+
+    gptr = jax.vmap(one)(lit_lens, match_lens, offsets, n_cmds,
+                         block_start.astype(jnp.int32),
+                         block_len, lit_base.astype(jnp.int32))
+    # scatter per-block pointer rows into the flat output space
+    flat = jnp.full(total_size, -1, jnp.int32)
+    pos = (block_start[:, None].astype(jnp.int32)
+           + jnp.arange(out_size, dtype=jnp.int32)[None, :])
+    keep = (jnp.arange(out_size, dtype=jnp.int32)[None, :]
+            < block_len[:, None])
+    flat = flat.at[jnp.where(keep, pos, total_size)].set(
+        jnp.where(keep, gptr, -1), mode="drop")
+
+    lit_flat = literals.reshape(-1)
+    # global literal index -> (block, local) via lit_base is already folded in
+    n_rounds = max(1, int(np.ceil(np.log2(max(total_size, 2)))))
+
+    def body(_, p):
+        nxt = p[jnp.clip(p, 0, total_size - 1)]
+        return jnp.where(p >= 0, nxt, p)
+
+    flat = jax.lax.fori_loop(0, n_rounds, body, flat)
+    gl = jnp.clip(-flat - 1, 0, lit_flat.shape[0] - 1)
+    return lit_flat[gl]
+
+
+def rans_decode_ref(words, word_off, n_syms, lanes, class_ids, freqs,
+                    k_max: int = 32, t_max: int | None = None):
+    """Oracle for the rANS Pallas kernel — delegates to the batched jnp
+    decoder in core.entropy (same step math, same layout)."""
+    from repro.core.entropy import rans_decode_batch_jnp
+    return rans_decode_batch_jnp(words, word_off, n_syms, lanes, class_ids,
+                                 freqs, k_max=k_max, t_max=t_max)

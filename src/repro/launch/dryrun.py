@@ -1,0 +1,457 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (assignment MULTI-POD DRY-RUN).
+
+For every (architecture × input shape × mesh) cell: build ShapeDtypeStruct
+params/inputs (no allocation), attach NamedShardings, .lower().compile() the
+train/prefill/decode step, print memory_analysis() + cost_analysis(), parse
+collective bytes from the optimized HLO, and append the cell record to a
+results JSON consumed by the roofline report (EXPERIMENTS.md §Dry-run /
+§Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, all_configs, get_config
+from repro.configs.base import ShapeConfig
+from repro.distributed.sharding import spec_for, make_rules
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import common as cm
+from repro.models.registry import build_model
+from repro.roofline import hlo_costs as rl
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import make_train_step
+
+
+def _shardings_for(defs_axes: Dict, shapes: Dict, mesh, rules) -> Dict:
+    """Argument shardings by logical axes, sanitized for divisibility
+    against the actual array shapes (see sharding.sanitize_spec)."""
+    from repro.distributed.sharding import arg_sharding
+    return {k: arg_sharding(mesh, tuple(shapes[k].shape), a, rules)
+            for k, a in defs_axes.items()}
+
+
+# --------------------------------------------------------------- cost pass
+# XLA HloCostAnalysis counts while-loop bodies ONCE (verified empirically in
+# EXPERIMENTS.md §Dry-run methodology), so scan-over-layers programs would
+# under-report flops/bytes/collectives by ~n_layers×. The cost pass lowers
+# two reduced-depth UNROLLED variants of the same cell and extrapolates each
+# metric linearly in depth — exact for depth-linear programs. MoE expert
+# compute is capacity-invariant in expert count (C·Ex = T·k·cf), so reduced
+# expert counts keep expert flops exact. xLSTM's sLSTM time scan is the one
+# loop that cannot be unrolled (sequential over S); its closed-form per-step
+# cost is added analytically.
+
+def _depth_plan(cfg):
+    """→ (d1, d2, full_units, tail_units) in 'unit' space (layers/groups)."""
+    import dataclasses as dc
+    if cfg.family in ("dense", "vlm", "moe", "whisper"):
+        full = cfg.n_layers
+        return 1, 2, full, 0.0
+    if cfg.family == "xlstm":
+        return 1, 2, cfg.n_layers // cfg.slstm_every, 0.0
+    if cfg.family == "rglru":
+        pat = len(cfg.layer_pattern)
+        full_groups = cfg.n_layers // pat
+        tail = (cfg.n_layers - full_groups * pat) / pat  # ≈ fraction of group
+        return 1, 2, full_groups, tail
+    raise ValueError(cfg.family)
+
+
+def _depth_cfg(cfg, d: int):
+    import dataclasses as dc
+    if cfg.family in ("dense", "vlm"):
+        return dc.replace(cfg, n_layers=d)
+    if cfg.family == "moe":
+        return dc.replace(cfg, n_layers=d,
+                          n_experts=min(cfg.n_experts, 16))
+    if cfg.family == "whisper":
+        return dc.replace(cfg, n_layers=d, n_enc_layers=d)
+    if cfg.family == "xlstm":
+        return dc.replace(cfg, n_layers=d * cfg.slstm_every)
+    if cfg.family == "rglru":
+        return dc.replace(cfg, n_layers=d * len(cfg.layer_pattern))
+    raise ValueError(cfg.family)
+
+
+def _slstm_analytic(cfg, shape, n_dev: int):
+    """Per-device closed-form cost of the sLSTM time recurrence that the
+    (once-counted) lax.scan hides: (S-1) extra steps × per-step cost."""
+    if cfg.family != "xlstm" or shape.kind == "decode":
+        return 0.0, 0.0
+    H = cfg.n_heads
+    Ds = cfg.d_model // H
+    B_local = max(1, shape.global_batch // max(1, n_dev // 1))
+    # batch shards over dp axes only; approximate dp = min(B, 32)
+    B_local = max(1, shape.global_batch // min(shape.global_batch, 32))
+    steps = shape.seq_len - 1
+    per_step_flops = 2 * 4 * B_local * H * Ds * Ds + 12 * B_local * H * Ds
+    per_step_bytes = 4 * H * Ds * Ds * 4 + 10 * B_local * H * Ds * 4
+    n_s_layers = cfg.n_layers // cfg.slstm_every
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd ≈ 3× fwd
+    return (mult * steps * per_step_flops * n_s_layers,
+            mult * steps * per_step_bytes * n_s_layers)
+
+
+def _measure_cell(cfg, d: int, shape_name: str, mesh, remat, rules,
+                  depth_cfg_fn) -> Dict:
+    """One reduced-depth unrolled lower+compile → raw metrics dict."""
+    from repro.models import common as cm_mod
+    cfg_d = depth_cfg_fn(cfg, d)
+    fn, args, in_sh, out_sh, donate, _ = build_cell(
+        cfg_d, shape_name, mesh, remat=remat, rules=rules)
+    from repro.distributed.sharding import set_active_rules
+    cm_mod.set_unroll_scans(True)
+    set_active_rules(rules)
+    cm_mod.set_attn_impl("blockwise", 1024)
+    try:
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+    finally:
+        cm_mod.set_unroll_scans(False)
+        set_active_rules(None)
+        cm_mod.set_attn_impl("full")
+    cost = compiled.cost_analysis()
+    coll = rl.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            **{f"coll_{k}": float(v) for k, v in coll.items()}}
+
+
+def cost_extrapolated(arch: str, shape_name: str, mesh, remat: str,
+                      rules=None) -> Dict:
+    """Two reduced-depth unrolled lowers → per-metric linear fit → full."""
+    from repro.models import common as cm_mod
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    d1, d2, full_units, tail_units = _depth_plan(cfg)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    rules = rules or rules_for(cfg)
+
+    def measure(d: int) -> Dict:
+        return _measure_cell(cfg, d, shape_name, mesh, remat, rules,
+                             _depth_cfg)
+
+    if cfg.family == "xlstm" and shape.kind != "decode":
+        # 2-D fit: cost(d, W) = A + d·(B + C·W). The mLSTM chunk scan is
+        # linear in chunk size W at fixed S (intra-chunk quadratic term
+        # ∝ S·W, inter-chunk ∝ S), so measuring at two CHEAP large chunks
+        # (few unrolled chunk bodies) extrapolates exactly to the real
+        # W=cfg.mlstm_chunk without compiling hundreds of unrolled chunks.
+        import dataclasses as dc
+        S = shape.seq_len
+        Wa, Wb = S // 2, S // 4
+        out = {}
+        ms = {}
+        for d in (d1, d2):
+            for W in (Wa, Wb):
+                cfg_m = dc.replace(cfg, mlstm_chunk=W)
+                ms[(d, W)] = _measure_cell(cfg_m, d, shape_name, mesh,
+                                           remat, rules, _depth_cfg)
+        keys = ms[(d1, Wa)].keys()
+        for k in keys:
+            Ba = (ms[(d2, Wa)][k] - ms[(d1, Wa)][k]) / (d2 - d1)
+            Bb = (ms[(d2, Wb)][k] - ms[(d1, Wb)][k]) / (d2 - d1)
+            Cc = (Ba - Bb) / (Wa - Wb)
+            Bc = Ba - Cc * Wa
+            A = ms[(d1, Wa)][k] - d1 * Ba
+            out[k] = max(A + full_units * (Bc + Cc * cfg.mlstm_chunk), 0.0)
+        f_extra, b_extra = _slstm_analytic(cfg, shape, n_dev)
+        out["flops"] += f_extra
+        out["bytes"] += b_extra
+        return out
+
+    m1, m2 = measure(d1), measure(d2)
+    out = {}
+    for k in m1:
+        slope = (m2[k] - m1[k]) / (d2 - d1)
+        base = m1[k] - slope * d1
+        # clamp: a linear fit may go (slightly) negative when the
+        # non-layer base dominates a tiny per-layer metric
+        out[k] = max(base + slope * (full_units + tail_units), 0.0)
+    f_extra, b_extra = _slstm_analytic(cfg, shape, n_dev)
+    out["flops"] += f_extra
+    out["bytes"] += b_extra
+    return out
+
+
+SEQ_SHARD_FAMILIES = ("dense", "vlm", "whisper", "rglru")
+# §Perf iteration 5: Megatron-SP residual-stream sharding (seq over
+# "model" between blocks) — adopted per-family: 3–4× roofline-fraction
+# win for dense/vlm/whisper/rglru; REFUTED for MoE (the group-local
+# dispatch needs S local) and untested-risky for xlstm's chunk scan.
+
+
+def rules_for(cfg) -> dict:
+    if cfg.family in SEQ_SHARD_FAMILIES:
+        return make_rules(seq="model", embed_act=None)
+    return make_rules()
+
+
+def build_cell(cfg_or_arch, shape_name: str, mesh, remat: str = "full",
+               rules=None):
+    """→ (fn, arg_structs, in_shardings, out_shardings, donate, meta)."""
+    cfg = (cfg_or_arch if not isinstance(cfg_or_arch, str)
+           else get_config(cfg_or_arch))
+    shape = SHAPES_BY_NAME[shape_name]
+    model = build_model(cfg)
+    rules = rules or rules_for(cfg)
+    if shape.global_batch < int(np.prod([mesh.shape[a]
+                                         for a in dp_axes(mesh)])):
+        rules = dict(rules)
+        rules["batch"] = None       # B=1 long-decode: replicate batch
+
+    defs = model.param_defs()
+    p_structs = cm.param_structs(defs)
+    p_axes = {k: a for k, (s, a) in defs.items()}
+    p_shard = _shardings_for(p_axes, p_structs, mesh, rules)
+
+    in_structs = model.input_specs(shape)
+    in_axes = model.input_axes(shape)
+    in_shard = _shardings_for(in_axes, in_structs, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, opt_cfg, remat=remat)
+        opt_structs = {
+            "m": {k: jax.ShapeDtypeStruct(v.shape, jnp.float32)
+                  for k, v in p_structs.items()},
+            "v": {k: jax.ShapeDtypeStruct(v.shape, jnp.float32)
+                  for k, v in p_structs.items()},
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_structs = {"params": p_structs, "opt": opt_structs}
+        state_shard = {
+            "params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard,
+                    "step": NamedSharding(mesh, P())},
+        }
+        metrics_shard = {"loss": NamedSharding(mesh, P()),
+                         "grad_norm": NamedSharding(mesh, P()),
+                         "lr": NamedSharding(mesh, P())}
+        fn = step
+        args = (state_structs, in_structs)
+        in_sh = (state_shard, in_shard)
+        out_sh = (state_shard, metrics_shard)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            if cfg.family == "whisper":
+                return model.forward(params, batch["tokens"],
+                                     batch["frames"], remat=remat)
+            if cfg.family == "vlm":
+                return model.forward(params, batch["tokens"],
+                                     mrope=batch.get("mrope"),
+                                     img_embeds=batch.get("img_embeds"),
+                                     remat=remat)
+            return model.forward(params, batch["tokens"], remat=remat)
+
+        args = (p_structs, in_structs)
+        in_sh = (p_shard, in_shard)
+        from repro.distributed.sharding import arg_sharding
+        out_sh = arg_sharding(
+            mesh, (shape.global_batch, shape.seq_len, cfg.vocab),
+            ("batch", "seq", "vocab"), rules)
+        donate = ()
+    else:  # decode
+        B, S = shape.global_batch, shape.seq_len
+        cache_structs = model.cache_specs(B, S)
+        cache_shard = _shardings_for(model.cache_axes(), cache_structs,
+                                     mesh, rules)
+
+        def fn(params, cache, batch):
+            return model.decode_step(params, cache, batch["tokens"])
+
+        args = (p_structs, cache_structs, in_structs)
+        in_sh = (p_shard, cache_shard, in_shard)
+        from repro.distributed.sharding import arg_sharding
+        out_sh = (arg_sharding(mesh, (shape.global_batch, cfg.vocab),
+                               ("batch", "vocab"), rules),
+                  cache_shard)
+        donate = (1,)
+
+    meta = {"cfg": cfg, "shape": shape}
+    return fn, args, in_sh, out_sh, donate, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             remat: str = "full", rules=None, verbose: bool = True,
+             keep_hlo: bool = False, cost_pass: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if rules is None:
+        rules = rules_for(get_config(arch))
+    fn, args, in_sh, out_sh, donate, meta = build_cell(
+        arch, shape_name, mesh, remat=remat, rules=rules)
+    cfg, shape = meta["cfg"], meta["shape"]
+
+    from repro.distributed.sharding import set_active_rules
+    t0 = time.time()
+    set_active_rules(rules)
+    cm.set_attn_impl("blockwise", 1024)   # §Perf iteration 6 default
+    try:
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        set_active_rules(None)
+        cm.set_attn_impl("full")
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if cost_pass:
+        ext = cost_extrapolated(arch, shape_name, mesh, remat, rules)
+        cost = {"flops": ext["flops"], "bytes accessed": ext["bytes"]}
+        coll = {k[5:]: int(v) for k, v in ext.items()
+                if k.startswith("coll_")}
+    else:  # raw (scan bodies counted once — methodology note applies)
+        cost = compiled.cost_analysis()
+        coll = rl.collective_bytes(hlo)
+
+    if shape.kind == "train":
+        n_tokens = shape.global_batch * shape.seq_len
+        model_flops = rl.model_flops_train(cfg, n_tokens)
+        # fwd+bwd ≈ 3× forward matmul work is already the 6·N·D convention
+    elif shape.kind == "prefill":
+        n_tokens = shape.global_batch * shape.seq_len
+        model_flops = rl.model_flops_train(cfg, n_tokens) / 3.0  # fwd only
+    else:
+        model_flops = rl.model_flops_decode(cfg, shape.global_batch,
+                                            shape.seq_len)
+
+    terms = rl.RooflineTerms(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=coll, n_devices=n_dev, model_flops=model_flops)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": n_dev, "remat": remat,
+        "rules": "custom" if rules else "default",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": _mem_dict(mem),
+        **terms.to_dict(),
+        "ok": True,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}"
+              f" ({n_dev} devices)")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {rec['memory_analysis']}")
+        print(f"  cost_analysis: flops/dev={terms.flops:.3e} "
+              f"bytes/dev={terms.bytes_accessed:.3e}")
+        print(f"  collectives/dev: { {k: f'{v:.3e}' for k, v in coll.items() if v} }")
+        print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"dominant={terms.dominant} "
+              f"useful={terms.useful_ratio:.2f} "
+              f"fraction={terms.roofline_fraction:.3f}")
+    if keep_hlo:
+        rec["hlo"] = hlo
+    return rec
+
+
+def _mem_dict(mem) -> Dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def iter_cells():
+    for arch, cfg in all_configs().items():
+        for shape in cfg.runnable_shapes():
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-shapes-for-arch", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "seq_shard"],
+                    help="seq_shard: Megatron-SP residual stream "
+                         "(seq over model between blocks)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(iter_cells())
+    elif args.all_shapes_for_arch:
+        cells = [(args.arch, s.name)
+                 for s in get_config(args.arch).runnable_shapes()]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("remat", "full"))
+            for r in results if r.get("ok")}
+
+    for arch, shape in cells:
+        for mk in meshes:
+            key = (arch, shape, mk, args.remat)
+            if key in done:
+                print(f"[skip cached] {key}")
+                continue
+            try:
+                rules = (make_rules(seq="model", embed_act=None)
+                         if args.rules == "seq_shard" else None)
+                rec = run_cell(arch, shape, mk, remat=args.remat,
+                               rules=rules)
+            except Exception as e:                     # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "remat": args.remat, "ok": False, "error": repr(e)}
+            results.append(rec)
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if any(not r.get("ok") for r in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

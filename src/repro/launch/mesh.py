@@ -1,0 +1,30 @@
+"""Production mesh builders (assignment MULTI-POD DRY-RUN §1).
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (tests/examples): (n/model, model)."""
+    n = len(jax.devices())
+    dp = max(1, n // model_parallel)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch-sharding axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

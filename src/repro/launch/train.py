@@ -1,0 +1,89 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 100 --reduced --batch 8 --seq 128 [--model-parallel 2]
+
+Full-config multi-pod launches use the same path with the production mesh;
+on this CPU container you run reduced configs (the full configs are
+exercised by the dry-run, which is the point of ShapeDtypeStruct lowering).
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+from repro.configs import get_config
+from repro.data.fastq import make_fastq
+from repro.data.pipeline import CompressedResidentDataLoader, PipelineConfig
+from repro.distributed.fault_tolerance import run_resilient_training
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (init_train_state, make_manual_dp_step,
+                                       make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--manual-dp", action="store_true",
+                    help="shard_map DP with explicit psum")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 gradient all-reduce (requires --manual-dp)")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                      total_steps=args.steps)
+
+    corpus = make_fastq("platinum", n_reads=4000, seed=0)
+    dl = CompressedResidentDataLoader(
+        corpus, PipelineConfig(seq_len=args.seq, batch_size=args.batch,
+                               block_size=16 * 1024))
+    print(dl.compression_summary())
+
+    state = init_train_state(model, jax.random.key(0), opt)
+    start = 0
+    ck = Checkpointer(CheckpointConfig(
+        directory=os.path.join(args.ckpt_dir, args.arch)))
+    if args.resume and ck.latest_step() is not None:
+        restored = ck.restore()
+        manifest = restored.pop("_manifest")
+        state = restored
+        start = int(manifest["extra"].get("step", 0))
+        dl.load_state_dict(manifest["extra"]["loader"])
+        print(f"resumed from step {start}")
+
+    if args.manual_dp:
+        mesh = make_local_mesh()
+        inner = make_manual_dp_step(model, opt, mesh, remat=args.remat,
+                                    compress=args.grad_compress)
+        key = jax.random.key(1)
+
+        def step(st, batch):
+            return inner(st, batch, key)
+    else:
+        step = jax.jit(make_train_step(model, opt, remat=args.remat))
+
+    run_resilient_training(step, state, iter(dl), ck, n_steps=args.steps,
+                           start_step=start, ckpt_every=args.ckpt_every,
+                           loader=dl, log_every=10)
+    print("training complete;", ck.latest_step())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Shared model substrate: params-as-flat-dict, norms, RoPE/M-RoPE, GQA
+attention (causal / local / cross / decode-with-cache), MLPs, losses.
+
+Parameters are a FLAT dict {path: array}; each model declares
+`param_defs(cfg) -> {path: (shape, logical_axes)}` — one source of truth
+for init (smoke tests), ShapeDtypeStructs (dry-run) and shardings (pjit).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard, spec_for
+
+ParamDefs = Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]]
+
+# ------------------------------------------------------------ layer scanning
+# XLA HloCostAnalysis counts a while-loop body ONCE (not × trip count), so
+# dry-run cost extraction lowers reduced-depth UNROLLED variants and
+# extrapolates (launch/dryrun.py). Models route every structural scan
+# (layers / groups / experts / chunks) through scan_layers so one flag flips
+# the lowering; real training/serving always uses lax.scan (small HLO).
+_UNROLL_SCANS = False
+
+
+def set_unroll_scans(v: bool) -> None:
+    global _UNROLL_SCANS
+    _UNROLL_SCANS = v
+
+
+def scan_layers(body, carry, xs):
+    """lax.scan or (under set_unroll_scans) an unrolled Python loop."""
+    if not _UNROLL_SCANS:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ------------------------------------------------------------------- params
+def init_params(defs: ParamDefs, key, dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for path, (shape, axes) in defs.items():
+        k = jax.random.fold_in(key, abs(hash(path)) % (2 ** 31))
+        if path.endswith(("norm", "norm_b", "bias", "b")) or "norm" in path.split("/")[-1]:
+            val = (jnp.ones(shape, dtype) if path.endswith("norm")
+                   or path.split("/")[-1].startswith("norm")
+                   else jnp.zeros(shape, dtype))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if "embed" in path else 1.0 / math.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        out[path] = val
+    return out
+
+
+def param_structs(defs: ParamDefs, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs (no allocation) — dry-run params."""
+    return {p: jax.ShapeDtypeStruct(s, dtype) for p, (s, _) in defs.items()}
+
+
+def param_specs(defs: ParamDefs, rules=None):
+    """{path: PartitionSpec} from logical axes."""
+    return {p: spec_for(a, rules) for p, (s, a) in defs.items()}
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x, w, eps: float):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, D), positions (..., S) int32."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: positions3 (3, ..., S) t/h/w ids; `sections` gives
+    how many rotary frequency pairs each coordinate owns (sums to D/2)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))                        # (D/2,)
+    sec = np.concatenate([[0], np.cumsum(sections)])
+    assert sec[-1] == d // 2, "mrope sections must sum to head_dim/2"
+    parts = []
+    for i in range(3):
+        ang_i = (positions3[i][..., None].astype(jnp.float32)
+                 * inv[sec[i]:sec[i + 1]])
+        parts.append(ang_i)
+    ang = jnp.concatenate(parts, axis=-1)                          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def _mask_bias(sq, sk, q_offset, causal: bool, window: int, dtype):
+    qi = jax.lax.iota(jnp.int32, sq)[:, None] + q_offset
+    ki = jax.lax.iota(jnp.int32, sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= ki <= qi
+    if window and window > 0:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, jnp.finfo(jnp.float32).min).astype(jnp.float32)
+
+
+def gqa_attention(q, k, v, *, causal=True, window: int = 0, q_offset=0,
+                  kv_len=None):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) → (B,Sq,H,D). fp32 softmax.
+
+    kv_len: optional (B,) valid cache length (decode); positions ≥ kv_len
+    are masked. Head grouping: H = KV · G.
+    """
+    if (ATTN_IMPL == "blockwise" and kv_len is None and q.shape[1] > 1
+            and k.shape[1] % min(ATTN_KV_CHUNK, k.shape[1]) == 0):
+        return gqa_attention_blockwise(q, k, v, causal=causal,
+                                       window=window,
+                                       kv_chunk=ATTN_KV_CHUNK)
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / math.sqrt(D)
+    # K/V stay in their storage dtype (bf16 cache) — fp32 happens in the
+    # MXU accumulator (preferred_element_type), NOT by materializing an
+    # fp32 copy of the cache (§Perf iteration 1: halves decode KV traffic)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    bias = _mask_bias(Sq, k.shape[1], q_offset, causal, window, scores.dtype)
+    scores = scores + bias[None, None, None]
+    if kv_len is not None:
+        ki = jax.lax.iota(jnp.int32, k.shape[1])
+        live = ki[None] < kv_len[:, None]                      # (B, Sk)
+        scores = jnp.where(live[:, None, None, None, :], scores,
+                           jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)                    # fp32
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def cross_attention(q, k, v):
+    """Non-causal full cross attention (whisper decoder → encoder)."""
+    return gqa_attention(q, k, v, causal=False, window=0)
+
+
+# global switch: "full" materializes (…,Sq,Sk) scores; "blockwise" runs the
+# flash-attention recurrence over key chunks (online softmax) — §Perf
+# iteration 6 lever. Train/prefill paths read this; decode always "full"
+# (Sq=1 scores are tiny).
+ATTN_IMPL = "full"
+ATTN_KV_CHUNK = 1024
+
+
+def set_attn_impl(impl: str, kv_chunk: int = 1024) -> None:
+    global ATTN_IMPL, ATTN_KV_CHUNK
+    ATTN_IMPL = impl
+    ATTN_KV_CHUNK = kv_chunk
+
+
+def gqa_attention_blockwise(q, k, v, *, causal=True, window: int = 0,
+                            kv_chunk: int = 1024):
+    """Flash-style attention: scan over key chunks with the online-softmax
+    running (max, sum, acc) triple — the (Sq, Sk) score tensor never
+    materializes beyond (Sq, kv_chunk). fp32 accumulators, bf16 matmul
+    operands (MXU-native)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    C = min(kv_chunk, Sk)
+    assert Sk % C == 0, "kv len must divide kv_chunk"
+    NC = Sk // C
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / math.sqrt(D)
+    kc = jnp.moveaxis(k.reshape(B, NC, C, KV, D), 1, 0)     # (NC,B,C,KV,D)
+    vc = jnp.moveaxis(v.reshape(B, NC, C, KV, D), 1, 0)
+
+    qi = jax.lax.iota(jnp.int32, Sq)[:, None]
+
+    def chunk(carry, xs):
+        m, l, acc = carry
+        kj, vj, j0 = xs
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        ki = j0 + jax.lax.iota(jnp.int32, C)[None, :]
+        ok = jnp.ones((Sq, C), bool)
+        if causal:
+            ok &= ki <= qi
+        if window and window > 0:
+            ok &= ki > qi - window
+        s = jnp.where(ok[None, None, None], s, jnp.finfo(jnp.float32).min)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(q.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    offs = jnp.arange(NC, dtype=jnp.int32) * C
+    # scan_layers: unrolls under the dry-run cost pass so chunk work is
+    # counted × NC (HloCostAnalysis counts while bodies once)
+    (m, l, acc), _ = scan_layers(chunk, (m0, l0, a0), (kc, vc, offs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- mlps
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("bse,ef->bsf", x, w_gate)
+    u = jnp.einsum("bse,ef->bsf", x, w_up)
+    return jnp.einsum("bsf,fe->bse", jax.nn.silu(g.astype(jnp.float32))
+                      .astype(x.dtype) * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jnp.einsum("bse,ef->bsf", x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fe->bse", h, w_out) + b_out
+
+
+# -------------------------------------------------------------------- loss
+def cross_entropy_loss(logits, labels, vocab: int):
+    """logits (B,S,V) any dtype, labels (B,S) int32 → scalar mean nll.
+    logsumexp in fp32; vocab axis may be model-sharded (XLA all-reduces)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# -------------------------------------------------------------- kv caching
+def init_kv_cache(B: int, S: int, n_kv: int, head_dim: int, n_layers: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((n_layers, B, S, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, B, S, n_kv, head_dim), dtype),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def kv_cache_specs(B: int, S: int, n_kv: int, head_dim: int, n_layers: int,
+                   dtype=jnp.bfloat16):
+    return {
+        "k": jax.ShapeDtypeStruct((n_layers, B, S, n_kv, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((n_layers, B, S, n_kv, head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+# decode caches shard the SEQUENCE axis over "model" (distributed
+# flash-decode: per-shard partial softmax, XLA all-reduces the max/sum) —
+# kv-head counts (1–40) are too small/ragged to shard and would collide
+# with kv_seq on the same mesh axis.
+KV_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", None, None),
+    "v": ("layers", "batch", "kv_seq", None, None),
+    "pos": ("batch",),
+}

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts LM (qwen3-moe 128e/top-8, grok-1 8e/top-2).
+
+Dispatch is a *scan over experts* with capacity-bounded gather: per expert,
+top-C token selection by gate weight, expert FFN on the (C, d) slab,
+scatter-add back. Compute = Σ_e C·3·d·f = tokens·k·ffn_flops — the active
+FLOPs of the config — while HLO stays O(1) in expert count (stacked weights,
+one scan). Expert FFN weights are TP-sharded over "model" and FSDP over
+"data" like every other weight; no all-to-all in the baseline (the
+all-to-all dispatch variant is a §Perf lever, see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models.transformer import DenseLM
+
+
+def moe_ffn(x, w_router, w_gate, w_up, w_down, top_k: int,
+            capacity_factor: float):
+    """x (B,S,E) → (B,S,E). Expert weights stacked on axis 0 (Ex, ...).
+
+    GROUP-LOCAL capacity (group = sequence, GShard/MaxText style): each
+    expert takes its top-C tokens PER SEQUENCE, so the select / gather /
+    scatter all act along the S axis of a batch-sharded tensor — no
+    cross-data-shard token movement, which is what keeps the dispatch off
+    the interconnect under SPMD (EXPERIMENTS.md §Dry-run shows the
+    global-capacity variant all-gathering the whole token tensor per
+    expert)."""
+    B, S, E = x.shape
+    Ex = w_gate.shape[0]
+    # router in fp32 (standard practice — tiny, numerically sensitive)
+    logits = jnp.einsum("bse,ex->bsx", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, top_k)                  # (B,S,k)
+    top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+    # per-(token, expert) gate via SCATTER — the one_hot-einsum alternative
+    # materializes a (B,S,k,Ex) fp32 tensor (§Perf MoE iteration 1)
+    bi = jnp.broadcast_to(jnp.arange(B)[:, None, None], top_i.shape)
+    si = jnp.broadcast_to(jnp.arange(S)[None, :, None], top_i.shape)
+    gate = jnp.zeros((B, S, Ex), jnp.float32).at[bi, si, top_i].add(top_v)
+
+    C = min(S, max(1, int(S * top_k / Ex * capacity_factor)))
+    # expert-CHUNKED dispatch (§Perf MoE iteration 2): vmap EC experts per
+    # scan step so the (B,S,E) accumulator carry is rewritten Ex/EC times,
+    # not Ex times — the carry traffic dominated the memory roofline term.
+    EC = 1
+    for cand in (16, 8, 4, 2, 1):
+        if Ex % cand == 0:
+            EC = cand
+            break
+    NC = Ex // EC
+    rows = jnp.broadcast_to(jnp.arange(B)[None, :, None], (EC, B, C))
+
+    def chunk(acc, ew):
+        g, wg, wu, wd = ew        # g (EC,B,S); wg/wu (EC,E,F); wd (EC,F,E)
+        score = jnp.where(g > 0, g, -1.0)
+        cap_v, cap_i = jax.lax.top_k(score, C)                  # (EC,B,C)
+        keep = (cap_v > 0).astype(jnp.float32)
+        xe = jnp.take_along_axis(x[None], cap_i[..., None], axis=2)
+        h = jnp.einsum("abce,aef->abcf", xe, wg)
+        u = jnp.einsum("abce,aef->abcf", xe, wu)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(xe.dtype) * u
+        y = jnp.einsum("abcf,afe->abce", h, wd)
+        y = y * (cap_v * keep)[..., None].astype(y.dtype)
+        acc = acc.at[rows, cap_i].add(y)
+        return acc, None
+
+    gate_c = jnp.moveaxis(gate, -1, 0).reshape(NC, EC, B, S)
+    acc0 = jnp.zeros((B, S, E), x.dtype)
+    acc, _ = cm.scan_layers(chunk, acc0,
+                            (gate_c, w_gate.reshape(NC, EC, E, -1),
+                             w_up.reshape(NC, EC, E, -1),
+                             w_down.reshape(NC, EC, -1, E)))
+    return acc
+
+
+class MoELM(DenseLM):
+    def param_defs(self) -> cm.ParamDefs:
+        c = self.cfg
+        defs = super().param_defs()
+        L, E, F, Ex = c.n_layers, c.d_model, c.d_ff, c.n_experts
+        for n in ("w_gate", "w_up", "w_down"):
+            defs.pop(f"layers/{n}")
+        defs["layers/router"] = ((L, E, Ex), ("layers", "embed", None))
+        defs["layers/moe_gate"] = ((L, Ex, E, F),
+                                   ("layers", "experts", "embed", "ffn"))
+        defs["layers/moe_up"] = ((L, Ex, E, F),
+                                 ("layers", "experts", "embed", "ffn"))
+        defs["layers/moe_down"] = ((L, Ex, F, E),
+                                   ("layers", "experts", "ffn", "embed"))
+        return defs
+
+    def _mlp(self, lp, h):
+        y = moe_ffn(h, lp["router"], lp["moe_gate"], lp["moe_up"],
+                    lp["moe_down"], self.cfg.top_k, self.cfg.capacity_factor)
+        return shard(y, ("batch", "seq", "embed_act"))
+
+    def active_params_per_token(self) -> int:
+        """N_active for MODEL_FLOPS = 6·N_active·D (roofline)."""
+        c = self.cfg
+        attn = c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+        moe = c.top_k * 3 * c.d_model * c.d_ff + c.d_model * c.n_experts
+        embed = 2 * c.d_model * c.vocab
+        return c.n_layers * (attn + moe) + embed

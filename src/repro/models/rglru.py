@@ -1,0 +1,340 @@
+"""RecurrentGemma (arXiv:2402.19427): RG-LRU recurrent blocks + local
+sliding-window attention, pattern (rec, rec, attn).
+
+TPU-native choice: the RG-LRU linear recurrence h_t = a_t·h_{t-1} + b_t is
+trained with `jax.lax.associative_scan` — log-depth on the time axis instead
+of a sequential loop (DESIGN.md §3). Decode keeps O(1) recurrent state plus
+a fixed `local_window` KV ring (keys cached post-RoPE, so ring order is
+irrelevant) — which is what makes the long_500k decode shape runnable.
+
+26 layers = 8 scanned (rec, rec, attn) groups + 2 trailing rec layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models.transformer import _maybe_remat
+
+_C = 8.0  # RG-LRU decay sharpness constant
+
+
+# ------------------------------------------------------------------ RG-LRU
+def rglru_scan(x, r_gate, i_gate, lam):
+    """x (B,S,R) fp32; gates (B,S,R); lam (R,) raw. Associative scan."""
+    a_log = -_C * jax.nn.softplus(lam)[None, None, :] * r_gate   # (B,S,R) <=0
+    a = jnp.exp(a_log)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-6)) * (i_gate * x)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(x, r_gate, i_gate, lam, h_prev):
+    a_log = -_C * jax.nn.softplus(lam)[None, :] * r_gate          # (B,R)
+    a = jnp.exp(a_log)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-6)) * (i_gate * x)
+    return a * h_prev + b
+
+
+def causal_conv4(x, kern, state=None):
+    """Depthwise causal conv, width 4. x (B,S,R), kern (4,R).
+    state (B,3,R) holds the previous 3 inputs for decode."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, 3 - i:xp.shape[1] - i] * kern[3 - i][None, None]
+              for i in range(4))
+    new_state = xp[:, -3:]
+    return out, new_state
+
+
+class RecurrentGemma:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        pat = len(cfg.layer_pattern)                     # 3: (rec, rec, attn)
+        self.n_groups = cfg.n_layers // pat              # scanned groups
+        self.n_tail = cfg.n_layers - self.n_groups * pat # trailing rec layers
+        self.rec_per_group = sum(1 for p in cfg.layer_pattern if p == "rec")
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self) -> cm.ParamDefs:
+        c = self.cfg
+        G, RPG, T = self.n_groups, self.rec_per_group, self.n_tail
+        E, V, F = c.d_model, c.vocab, c.d_ff
+        R = E                                            # lru width
+        Q, KVD = c.q_dim, c.kv_dim
+        pat = len(c.layer_pattern)
+
+        def rec_defs(prefix, lead):
+            return {
+                f"{prefix}/norm": (lead + (E,), ("layers", None, None)[:len(lead)] + (None,)),
+                f"{prefix}/w_x": (lead + (E, R), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/w_y": (lead + (E, R), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/conv": (lead + (4, R), ("layers", None)[:len(lead)] + (None, "ffn")),
+                f"{prefix}/w_r": (lead + (R, R), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/w_i": (lead + (R, R), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/lam": (lead + (R,), ("layers", None)[:len(lead)] + ("ffn",)),
+                f"{prefix}/w_out": (lead + (R, E), ("layers", None)[:len(lead)] + ("ffn", "embed")),
+                f"{prefix}/mlp_norm": (lead + (E,), ("layers", None)[:len(lead)] + (None,)),
+                f"{prefix}/w_gate": (lead + (E, F), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/w_up": (lead + (E, F), ("layers", None)[:len(lead)] + ("embed", "ffn")),
+                f"{prefix}/w_down": (lead + (F, E), ("layers", None)[:len(lead)] + ("ffn", "embed")),
+            }
+
+        defs: cm.ParamDefs = {
+            "embed": ((V, E), ("vocab", "embed")),
+            "final_norm": ((E,), (None,)),
+            "unembed": ((E, V), ("embed", "vocab")),
+            # attention layer of each group
+            "attn/norm": ((G, E), ("layers", None)),
+            "attn/wq": ((G, E, Q), ("layers", "embed", "heads")),
+            "attn/wk": ((G, E, KVD), ("layers", "embed", "kv_heads")),
+            "attn/wv": ((G, E, KVD), ("layers", "embed", "kv_heads")),
+            "attn/wo": ((G, Q, E), ("layers", "heads", "embed")),
+            "attn/mlp_norm": ((G, E), ("layers", None)),
+            "attn/w_gate": ((G, E, F), ("layers", "embed", "ffn")),
+            "attn/w_up": ((G, E, F), ("layers", "embed", "ffn")),
+            "attn/w_down": ((G, F, E), ("layers", "ffn", "embed")),
+        }
+        defs.update(rec_defs("rec", (G, RPG)))
+        if T:
+            defs.update(rec_defs("tail", (T,)))
+        return defs
+
+    def init(self, key, dtype=jnp.bfloat16):
+        p = cm.init_params(self.param_defs(), key, dtype)
+        # lambda init so decay a ∈ [0.9, 0.999] at r=0.5 (paper init)
+        for k in list(p):
+            if k.endswith("/lam"):
+                p[k] = jnp.full(p[k].shape, 0.65, p[k].dtype)
+        return p
+
+    # -------------------------------------------------------------- blocks
+    def _rec_block(self, rp, h, conv_state=None, lru_state=None,
+                   step=False):
+        c = self.cfg
+        hn = cm.rms_norm(h, rp["norm"], c.norm_eps)
+        x = jnp.einsum("bse,er->bsr", hn, rp["w_x"])
+        y = jnp.einsum("bse,er->bsr", hn, rp["w_y"])
+        x, conv_new = causal_conv4(x, rp["conv"], conv_state)
+        xf = x.astype(jnp.float32)
+        r = jax.nn.sigmoid(jnp.einsum("bsr,rt->bst", xf,
+                                      rp["w_r"].astype(jnp.float32)))
+        i = jax.nn.sigmoid(jnp.einsum("bsr,rt->bst", xf,
+                                      rp["w_i"].astype(jnp.float32)))
+        lam = rp["lam"].astype(jnp.float32)
+        if step:
+            hr = rglru_step(xf[:, 0], r[:, 0], i[:, 0], lam, lru_state)
+            lru_new = hr
+            hr = hr[:, None]
+        else:
+            hr = rglru_scan(xf, r, i, lam)
+            lru_new = hr[:, -1]
+        hr = hr.astype(h.dtype) * jax.nn.gelu(y.astype(jnp.float32)).astype(h.dtype)
+        h = h + jnp.einsum("bsr,re->bse", hr, rp["w_out"])
+        hn = cm.rms_norm(h, rp["mlp_norm"], c.norm_eps)
+        h = h + cm.swiglu(hn, rp["w_gate"], rp["w_up"], rp["w_down"])
+        return h, conv_new, lru_new
+
+    def _attn_block(self, ap, h, positions, k_cache=None, v_cache=None,
+                    pos=None):
+        c = self.cfg
+        B, S, E = h.shape
+        hn = cm.rms_norm(h, ap["norm"], c.norm_eps)
+        q = jnp.einsum("bse,eq->bsq", hn, ap["wq"]).reshape(
+            B, S, c.n_heads, c.head_dim)
+        k = jnp.einsum("bse,ek->bsk", hn, ap["wk"]).reshape(
+            B, S, c.n_kv_heads, c.head_dim)
+        v = jnp.einsum("bse,ek->bsk", hn, ap["wv"]).reshape(
+            B, S, c.n_kv_heads, c.head_dim)
+        q = cm.apply_rope(q, positions, c.rope_theta)
+        k = cm.apply_rope(k, positions, c.rope_theta)
+        if k_cache is None:
+            # sequence-parallel local attention (§Perf iteration 4):
+            # 10 q heads / 1 kv head never divide the model axis; Sq does
+            if S > 1:
+                q = shard(q, ("batch", "kv_seq", None, None))
+                k = shard(k, ("batch", None, None, None))
+                v = shard(v, ("batch", None, None, None))
+            att = cm.gqa_attention(q, k, v, causal=True,
+                                   window=c.local_window)
+            if S > 1:
+                att = shard(att, ("batch", "kv_seq", None, None))
+            new_k = new_v = None
+        else:
+            W = k_cache.shape[1]
+            slot = jnp.mod(pos[0], W)
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k,
+                                                   (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v,
+                                                   (0, slot, 0, 0))
+            live = jnp.minimum(pos + 1, W)
+            att = cm.gqa_attention(q, k_cache, v_cache, causal=False,
+                                   kv_len=live)
+            new_k, new_v = k_cache, v_cache
+        att = att.reshape(B, S, c.q_dim)
+        h = h + jnp.einsum("bsq,qe->bse", att, ap["wo"])
+        hn = cm.rms_norm(h, ap["mlp_norm"], c.norm_eps)
+        h = h + cm.swiglu(hn, ap["w_gate"], ap["w_up"], ap["w_down"])
+        return h, (new_k, new_v)
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params: Dict, tokens, remat: str = "full"):
+        c = self.cfg
+        B, S = tokens.shape
+        h = params["embed"].astype(jnp.bfloat16)[tokens]
+        h = shard(h, ("batch", "seq", "embed_act"))
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        rec = {k.split("/", 1)[1]: v for k, v in params.items()
+               if k.startswith("rec/")}
+        att = {k.split("/", 1)[1]: v for k, v in params.items()
+               if k.startswith("attn/")}
+
+        def group(h, gp):
+            rp_g, ap_g = gp
+
+            def rec_one(hh, rp):
+                out, _, _ = self._rec_block(rp, hh)
+                return out, None
+
+            h, _ = cm.scan_layers(rec_one, h, rp_g)
+            h, _ = self._attn_block(ap_g, h, positions)
+            return shard(h, ("batch", "seq", "embed_act")), None
+
+        group = _maybe_remat(group, remat)
+        h, _ = cm.scan_layers(group, h, (rec, att))
+        if self.n_tail:
+            tail = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("tail/")}
+
+            def tail_one(hh, rp):
+                out, _, _ = self._rec_block(rp, hh)
+                return out, None
+
+            h, _ = cm.scan_layers(tail_one, h, tail)
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])
+        return shard(logits, ("batch", "seq", "vocab"))
+
+    def loss(self, params, batch, remat: str = "full"):
+        logits = self.forward(params, batch["tokens"], remat=remat)
+        return cm.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab)
+
+    # -------------------------------------------------------------- serving
+    def cache_specs(self, B: int, S: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        G, RPG, T = self.n_groups, self.rec_per_group, self.n_tail
+        R = c.d_model
+        W = min(c.local_window, S)
+        f32 = jnp.float32
+        spec = {
+            "rec_lru": jax.ShapeDtypeStruct((G, RPG, B, R), f32),
+            "rec_conv": jax.ShapeDtypeStruct((G, RPG, B, 3, R), f32),
+            "k": jax.ShapeDtypeStruct((G, B, W, c.n_kv_heads, c.head_dim),
+                                      dtype),
+            "v": jax.ShapeDtypeStruct((G, B, W, c.n_kv_heads, c.head_dim),
+                                      dtype),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+        if T:
+            spec["tail_lru"] = jax.ShapeDtypeStruct((T, B, R), f32)
+            spec["tail_conv"] = jax.ShapeDtypeStruct((T, B, 3, R), f32)
+        return spec
+
+    def cache_axes(self):
+        ax = {
+            "rec_lru": ("layers", None, "batch", "ffn"),
+            "rec_conv": ("layers", None, "batch", None, "ffn"),
+            "k": ("layers", "batch", "kv_seq", None, None),
+            "v": ("layers", "batch", "kv_seq", None, None),
+            "pos": ("batch",),
+        }
+        if self.n_tail:
+            ax["tail_lru"] = ("layers", "batch", "ffn")
+            ax["tail_conv"] = ("layers", "batch", None, "ffn")
+        return ax
+
+    def init_cache(self, B: int, S: int, dtype=jnp.bfloat16):
+        return {k: jnp.zeros(sp.shape, sp.dtype)
+                for k, sp in self.cache_specs(B, S, dtype).items()}
+
+    def decode_step(self, params: Dict, cache: Dict, tokens):
+        c = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        h = params["embed"].astype(jnp.bfloat16)[tokens]
+        positions = pos[:, None]
+        rec = {k.split("/", 1)[1]: v for k, v in params.items()
+               if k.startswith("rec/")}
+        att = {k.split("/", 1)[1]: v for k, v in params.items()
+               if k.startswith("attn/")}
+
+        def group(h, xs):
+            rp_g, ap_g, lru_g, conv_g, k_c, v_c = xs
+
+            def rec_one(hh, xs_r):
+                rp, lru, conv = xs_r
+                out, conv_n, lru_n = self._rec_block(
+                    rp, hh, conv_state=conv, lru_state=lru, step=True)
+                return out, (lru_n, conv_n)
+
+            h, (lru_n, conv_n) = cm.scan_layers(rec_one, h,
+                                                (rp_g, lru_g, conv_g))
+            h, (k_n, v_n) = self._attn_block(ap_g, h, positions,
+                                             k_cache=k_c, v_cache=v_c,
+                                             pos=pos)
+            return h, (lru_n, conv_n, k_n, v_n)
+
+        h, (lru, conv, k_c, v_c) = cm.scan_layers(
+            group, h, (rec, att, cache["rec_lru"], cache["rec_conv"],
+                       cache["k"], cache["v"]))
+        new_cache = {"rec_lru": lru, "rec_conv": conv, "k": k_c, "v": v_c,
+                     "pos": pos + 1}
+        if self.n_tail:
+            tail = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("tail/")}
+
+            def tail_one(hh, xs_r):
+                rp, lru_s, conv_s = xs_r
+                out, conv_n, lru_n = self._rec_block(
+                    rp, hh, conv_state=conv_s, lru_state=lru_s, step=True)
+                return out, (lru_n, conv_n)
+
+            h, (tl, tc) = cm.scan_layers(
+                tail_one, h, (tail, cache["tail_lru"], cache["tail_conv"]))
+            new_cache["tail_lru"] = tl
+            new_cache["tail_conv"] = tc
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])[:, 0]
+        return logits, new_cache
+
+    # -------------------------------------------------------------- dry-run
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict:
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "decode":
+            ax["tokens"] = ("batch", None)
+        return {k: v for k, v in ax.items()
+                if k in self.input_specs(shape)}

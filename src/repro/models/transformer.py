@@ -1,0 +1,207 @@
+"""Dense GQA transformer LM (qwen/yi/internlm families; backbone for the
+VLM and the attention half of the MoE models).
+
+Scan-over-layers with stacked parameters: HLO size and compile time are
+O(1) in depth — the property that makes 94-layer × 512-device dry-runs
+tractable (DESIGN.md §5). Remat policy is applied to the scanned block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self) -> cm.ParamDefs:
+        c = self.cfg
+        L, E, Q, KVD, F, V = (c.n_layers, c.d_model, c.q_dim, c.kv_dim,
+                              c.d_ff, c.vocab)
+        defs: cm.ParamDefs = {
+            "embed": ((V, E), ("vocab", "embed")),
+            "final_norm": ((E,), (None,)),
+            "unembed": ((E, V), ("embed", "vocab")),
+            "layers/attn_norm": ((L, E), ("layers", None)),
+            "layers/mlp_norm": ((L, E), ("layers", None)),
+            "layers/wq": ((L, E, Q), ("layers", "embed", "heads")),
+            "layers/wk": ((L, E, KVD), ("layers", "embed", "kv_heads")),
+            "layers/wv": ((L, E, KVD), ("layers", "embed", "kv_heads")),
+            "layers/wo": ((L, Q, E), ("layers", "heads", "embed")),
+            "layers/w_gate": ((L, E, F), ("layers", "embed", "ffn")),
+            "layers/w_up": ((L, E, F), ("layers", "embed", "ffn")),
+            "layers/w_down": ((L, F, E), ("layers", "ffn", "embed")),
+        }
+        if c.qkv_bias:
+            defs["layers/bq"] = ((L, Q), ("layers", "heads"))
+            defs["layers/bk"] = ((L, KVD), ("layers", "kv_heads"))
+            defs["layers/bv"] = ((L, KVD), ("layers", "kv_heads"))
+        return defs
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return cm.init_params(self.param_defs(), key, dtype)
+
+    # ------------------------------------------------------------ sublayers
+    def _qkv(self, lp, h, positions, mrope=None):
+        c = self.cfg
+        B, S, _ = h.shape
+        q = jnp.einsum("bse,eq->bsq", h, lp["wq"])
+        k = jnp.einsum("bse,ek->bsk", h, lp["wk"])
+        v = jnp.einsum("bse,ek->bsk", h, lp["wv"])
+        if c.qkv_bias:
+            q = q + lp["bq"]
+            k = k + lp["bk"]
+            v = v + lp["bv"]
+        q = q.reshape(B, S, c.n_heads, c.head_dim)
+        k = k.reshape(B, S, c.n_kv_heads, c.head_dim)
+        v = v.reshape(B, S, c.n_kv_heads, c.head_dim)
+        if mrope is not None:
+            q = cm.apply_mrope(q, mrope, c.rope_theta, c.mrope_sections)
+            k = cm.apply_mrope(k, mrope, c.rope_theta, c.mrope_sections)
+        else:
+            q = cm.apply_rope(q, positions, c.rope_theta)
+            k = cm.apply_rope(k, positions, c.rope_theta)
+        # SEQUENCE-PARALLEL attention (§Perf iteration 4): q is sharded on
+        # Sq over "model" — always divisible (4096/16), zero padding for
+        # ANY head count (12/40/48/10 heads never divide a 16-way axis);
+        # GQA k/v are small and replicate (head-sharding kv_heads < 16
+        # triggers involuntary rematerialization — iterations 2–3).
+        if S > 1:
+            q = shard(q, ("batch", "kv_seq", None, None))
+        k = shard(k, ("batch", None, None, None))
+        v = shard(v, ("batch", None, None, None))
+        return q, k, v
+
+    def _mlp(self, lp, h):
+        return cm.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+    def _block(self, lp, h, positions, mrope=None, window: int = 0):
+        c = self.cfg
+        hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+        q, k, v = self._qkv(lp, hn, positions, mrope)
+        att = cm.gqa_attention(q, k, v, causal=True, window=window)
+        att = shard(att, ("batch", "kv_seq", None, None))
+        att = att.reshape(h.shape[0], h.shape[1], c.q_dim)
+        h = h + jnp.einsum("bsq,qe->bse", att, lp["wo"])
+        h = shard(h, ("batch", "seq", "embed_act"))
+        hn = cm.rms_norm(h, lp["mlp_norm"], c.norm_eps)
+        h = h + self._mlp(lp, hn)
+        return shard(h, ("batch", "seq", "embed_act")), (k, v)
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params: Dict, tokens, mrope=None, img_embeds=None,
+                remat: str = "full", collect_kv: bool = False):
+        c = self.cfg
+        B, S = tokens.shape
+        h = params["embed"].astype(jnp.bfloat16)[tokens]
+        if img_embeds is not None:
+            h = jax.lax.dynamic_update_slice(
+                h, img_embeds.astype(h.dtype), (0, 0, 0))
+        h = shard(h, ("batch", "seq", "embed_act"))
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+        layer_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                        if k.startswith("layers/")}
+
+        def body(h, lp):
+            hh, kv = self._block(lp, h, positions, mrope)
+            return hh, (kv if collect_kv else None)
+
+        body = _maybe_remat(body, remat)
+        h, kvs = cm.scan_layers(body, h, layer_params)
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])
+        logits = shard(logits, ("batch", "seq", "vocab"))
+        return (logits, kvs) if collect_kv else logits
+
+    def loss(self, params: Dict, batch: Dict, remat: str = "full"):
+        logits = self.forward(params, batch["tokens"],
+                              mrope=batch.get("mrope"),
+                              img_embeds=batch.get("img_embeds"),
+                              remat=remat)
+        return cm.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab)
+
+    # -------------------------------------------------------------- serving
+    def cache_specs(self, B: int, S: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        return cm.kv_cache_specs(B, S, c.n_kv_heads, c.head_dim, c.n_layers,
+                                 dtype)
+
+    def cache_axes(self):
+        return dict(cm.KV_CACHE_AXES)
+
+    def init_cache(self, B: int, S: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        return cm.init_kv_cache(B, S, c.n_kv_heads, c.head_dim, c.n_layers,
+                                dtype)
+
+    def decode_step(self, params: Dict, cache: Dict, tokens, mrope=None):
+        """One token per sequence: tokens (B, 1) → logits (B, vocab)."""
+        c = self.cfg
+        B = tokens.shape[0]
+        h = params["embed"].astype(jnp.bfloat16)[tokens]      # (B,1,E)
+        pos = cache["pos"]                                    # (B,)
+        positions = pos[:, None]
+        layer_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                        if k.startswith("layers/")}
+
+        def body(h, xs):
+            lp, k_cache, v_cache = xs
+            hn = cm.rms_norm(h, lp["attn_norm"], c.norm_eps)
+            q, k, v = self._qkv(lp, hn, positions, mrope)
+            # keys cached post-rope → ring/linear layout agnostic
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k, (0, pos[0], 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v, (0, pos[0], 0, 0))
+            att = cm.gqa_attention(q, k_cache, v_cache, causal=False,
+                                   kv_len=pos + 1)
+            att = att.reshape(B, 1, c.q_dim)
+            h = h + jnp.einsum("bsq,qe->bse", att, lp["wo"])
+            hn = cm.rms_norm(h, lp["mlp_norm"], c.norm_eps)
+            h = h + self._mlp(lp, hn)
+            return h, (k_cache, v_cache)
+
+        h, (new_k, new_v) = cm.scan_layers(
+            body, h, (layer_params, cache["k"], cache["v"]))
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])[:, 0]
+        new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+        return logits, new_cache
+
+    # -------------------------------------------------------------- dry-run
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict:
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "decode":
+            ax["tokens"] = ("batch", None)
+        return {k: v for k, v in ax.items()
+                if k in self.input_specs(shape)}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {remat!r}")

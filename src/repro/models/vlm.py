@@ -1,0 +1,64 @@
+"""Qwen2-VL backbone (arXiv:2409.12191): the qwen2 dense LM with M-RoPE
+(t/h/w rotary sections 16/24/24) and a STUBBED vision frontend — per the
+assignment, `input_specs()` supplies precomputed patch embeddings
+(B, n_img_tokens, d) which replace the leading token positions (the
+"vision pad" region of the sequence); dynamic resolution reduces to the
+n_img_tokens knob. M-RoPE position ids (3, B, S) are an input: text tokens
+carry (t,t,t); image tokens carry their (t, h, w) grid coordinates.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import DenseLM
+
+
+class VLM(DenseLM):
+    def loss(self, params, batch, remat: str = "full"):
+        return super().loss(params, batch, remat=remat)
+
+    def forward(self, params, tokens, mrope=None, img_embeds=None,
+                remat: str = "full", collect_kv: bool = False):
+        if mrope is None:
+            # default M-RoPE ids: pure-text positions (t == h == w)
+            B, S = tokens.shape
+            p = jnp.arange(S, dtype=jnp.int32)[None, :]
+            mrope = jnp.broadcast_to(p[None], (3, B, S))
+        return super().forward(params, tokens, mrope=mrope,
+                               img_embeds=img_embeds, remat=remat,
+                               collect_kv=collect_kv)
+
+    def decode_step(self, params, cache, tokens, mrope=None):
+        if mrope is None:
+            B = tokens.shape[0]
+            p = cache["pos"][:, None]
+            mrope = jnp.broadcast_to(p[None], (3, B, 1))
+        return super().decode_step(params, cache, tokens, mrope=mrope)
+
+    # -------------------------------------------------------------- dry-run
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        img = jax.ShapeDtypeStruct((B, c.n_img_tokens, c.d_model),
+                                   jnp.float32)
+        mrope = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok, "img_embeds": img,
+                    "mrope": mrope}
+        if shape.kind == "prefill":
+            return {"tokens": tok, "img_embeds": img, "mrope": mrope}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict:
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+              "img_embeds": ("batch", None, "embed_act"),
+              "mrope": (None, "batch", "seq")}
+        if shape.kind == "decode":
+            ax["tokens"] = ("batch", None)
+        return {k: v for k, v in ax.items()
+                if k in self.input_specs(shape)}

@@ -1,0 +1,280 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv audio frontend is a STUB per the assignment: `input_specs()`
+supplies precomputed frame embeddings (B, n_frames, d) — the transformer
+backbone (24 enc + 24 dec layers, LayerNorm + GELU, cross-attention) is
+fully implemented. Positions are sinusoidal on both sides (the reference
+uses learned decoder embeddings capped at 448; sinusoidal keeps parameter
+shapes independent of the assigned 4k/32k decoder lengths — noted deviation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models.transformer import _maybe_remat
+
+
+def sinusoid_pos(S: int, E: int, offset=0):
+    pos = (np.arange(S) if isinstance(offset, int) and offset == 0
+           else None)
+    if pos is None:
+        p = jnp.arange(S) + offset
+    else:
+        p = jnp.asarray(pos)
+    half = E // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = p[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class Whisper:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self) -> cm.ParamDefs:
+        c = self.cfg
+        Le, Ld = c.n_enc_layers, c.n_layers
+        E, Q, F, V = c.d_model, c.q_dim, c.d_ff, c.vocab
+
+        def attn(prefix, L):
+            return {
+                f"{prefix}/norm_w": ((L, E), ("layers", None)),
+                f"{prefix}/norm_b": ((L, E), ("layers", None)),
+                f"{prefix}/wq": ((L, E, Q), ("layers", "embed", "heads")),
+                f"{prefix}/wk": ((L, E, Q), ("layers", "embed", "heads")),
+                f"{prefix}/wv": ((L, E, Q), ("layers", "embed", "heads")),
+                f"{prefix}/wo": ((L, Q, E), ("layers", "heads", "embed")),
+            }
+
+        def mlp(prefix, L):
+            return {
+                f"{prefix}/norm_w": ((L, E), ("layers", None)),
+                f"{prefix}/norm_b": ((L, E), ("layers", None)),
+                f"{prefix}/w_in": ((L, E, F), ("layers", "embed", "ffn")),
+                f"{prefix}/b_in": ((L, F), ("layers", "ffn")),
+                f"{prefix}/w_out": ((L, F, E), ("layers", "ffn", "embed")),
+                f"{prefix}/b_out": ((L, E), ("layers", None)),
+            }
+
+        defs: cm.ParamDefs = {
+            "embed": ((V, E), ("vocab", "embed")),
+            "enc_final_w": ((E,), (None,)),
+            "enc_final_b": ((E,), (None,)),
+            "dec_final_w": ((E,), (None,)),
+            "dec_final_b": ((E,), (None,)),
+        }
+        defs.update(attn("enc/self", Le))
+        defs.update(mlp("enc/mlp", Le))
+        defs.update(attn("dec/self", Ld))
+        defs.update(attn("dec/cross", Ld))
+        defs.update(mlp("dec/mlp", Ld))
+        return defs
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return cm.init_params(self.param_defs(), key, dtype)
+
+    # -------------------------------------------------------------- helpers
+    def _proj_qkv(self, lp, hq, hkv):
+        c = self.cfg
+        B, Sq, _ = hq.shape
+        Skv = hkv.shape[1]
+        q = jnp.einsum("bse,eq->bsq", hq, lp["wq"]).reshape(
+            B, Sq, c.n_heads, c.head_dim)
+        k = jnp.einsum("bse,eq->bsq", hkv, lp["wk"]).reshape(
+            B, Skv, c.n_heads, c.head_dim)
+        v = jnp.einsum("bse,eq->bsq", hkv, lp["wv"]).reshape(
+            B, Skv, c.n_heads, c.head_dim)
+        return q, k, v
+
+    def encode(self, params: Dict, frames, remat: str = "full"):
+        """frames (B, n_frames, E) — stub conv-frontend output."""
+        c = self.cfg
+        B, S, E = frames.shape
+        h = (frames.astype(jnp.bfloat16)
+             + sinusoid_pos(S, E)[None].astype(jnp.bfloat16))
+        h = shard(h, ("batch", "frames", "embed_act"))
+        self_p = {k.split("/")[2]: v for k, v in params.items()
+                  if k.startswith("enc/self/")}
+        mlp_p = {k.split("/")[2]: v for k, v in params.items()
+                 if k.startswith("enc/mlp/")}
+
+        def body(h, lp):
+            sp, mp = lp
+            hn = cm.layer_norm(h, sp["norm_w"], sp["norm_b"], c.norm_eps)
+            q, k, v = self._proj_qkv(sp, hn, hn)
+            att = cm.gqa_attention(q, k, v, causal=False)
+            h = h + jnp.einsum("bsq,qe->bse",
+                               att.reshape(B, S, c.q_dim), sp["wo"])
+            hn = cm.layer_norm(h, mp["norm_w"], mp["norm_b"], c.norm_eps)
+            h = h + cm.gelu_mlp(hn, mp["w_in"], mp["b_in"], mp["w_out"],
+                                mp["b_out"])
+            return h, None
+
+        body = _maybe_remat(body, remat)
+        h, _ = cm.scan_layers(body, h, (self_p, mlp_p))
+        return cm.layer_norm(h, params["enc_final_w"], params["enc_final_b"],
+                             c.norm_eps)
+
+    def decode(self, params: Dict, tokens, enc_out, remat: str = "full"):
+        c = self.cfg
+        B, S = tokens.shape
+        E = c.d_model
+        h = (params["embed"].astype(jnp.bfloat16)[tokens]
+             + sinusoid_pos(S, E)[None].astype(jnp.bfloat16))
+        h = shard(h, ("batch", "seq", "embed_act"))
+        self_p = {k.split("/")[2]: v for k, v in params.items()
+                  if k.startswith("dec/self/")}
+        cross_p = {k.split("/")[2]: v for k, v in params.items()
+                   if k.startswith("dec/cross/")}
+        mlp_p = {k.split("/")[2]: v for k, v in params.items()
+                 if k.startswith("dec/mlp/")}
+
+        def body(h, lp):
+            sp, xp, mp = lp
+            hn = cm.layer_norm(h, sp["norm_w"], sp["norm_b"], c.norm_eps)
+            q, k, v = self._proj_qkv(sp, hn, hn)
+            att = cm.gqa_attention(q, k, v, causal=True)
+            h = h + jnp.einsum("bsq,qe->bse",
+                               att.reshape(B, S, c.q_dim), sp["wo"])
+            hn = cm.layer_norm(h, xp["norm_w"], xp["norm_b"], c.norm_eps)
+            q, k, v = self._proj_qkv(xp, hn, enc_out)
+            att = cm.cross_attention(q, k, v)
+            h = h + jnp.einsum("bsq,qe->bse",
+                               att.reshape(B, S, c.q_dim), xp["wo"])
+            hn = cm.layer_norm(h, mp["norm_w"], mp["norm_b"], c.norm_eps)
+            h = h + cm.gelu_mlp(hn, mp["w_in"], mp["b_in"], mp["w_out"],
+                                mp["b_out"])
+            return h, None
+
+        body = _maybe_remat(body, remat)
+        h, _ = cm.scan_layers(body, h, (self_p, cross_p, mlp_p))
+        h = cm.layer_norm(h, params["dec_final_w"], params["dec_final_b"],
+                          c.norm_eps)
+        logits = jnp.einsum("bse,ve->bsv", h, params["embed"])  # tied
+        return shard(logits, ("batch", "seq", "vocab"))
+
+    def forward(self, params, tokens, frames=None, remat: str = "full"):
+        enc = self.encode(params, frames, remat=remat)
+        return self.decode(params, tokens, enc, remat=remat)
+
+    def loss(self, params, batch, remat: str = "full"):
+        logits = self.forward(params, batch["tokens"], batch["frames"],
+                              remat=remat)
+        return cm.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab)
+
+    # -------------------------------------------------------------- serving
+    def cache_specs(self, B: int, S: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        Ld = c.n_layers
+        return {
+            "k": jax.ShapeDtypeStruct((Ld, B, S, c.n_heads, c.head_dim),
+                                      dtype),
+            "v": jax.ShapeDtypeStruct((Ld, B, S, c.n_heads, c.head_dim),
+                                      dtype),
+            "xk": jax.ShapeDtypeStruct((Ld, B, c.n_frames, c.n_heads,
+                                        c.head_dim), dtype),
+            "xv": jax.ShapeDtypeStruct((Ld, B, c.n_frames, c.n_heads,
+                                        c.head_dim), dtype),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        kv = ("layers", "batch", "kv_seq", None, None)
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ("batch",)}
+
+    def init_cache(self, B: int, S: int, dtype=jnp.bfloat16,
+                   params=None, frames=None):
+        specs = self.cache_specs(B, S, dtype)
+        cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+        if params is not None and frames is not None:
+            enc = self.encode(params, frames, remat="none")
+            c = self.cfg
+            xp = {k.split("/")[2]: v for k, v in params.items()
+                  if k.startswith("dec/cross/")}
+
+            def prime(_, p):
+                k = jnp.einsum("bse,eq->bsq", enc, p["wk"]).reshape(
+                    B, -1, c.n_heads, c.head_dim)
+                v = jnp.einsum("bse,eq->bsq", enc, p["wv"]).reshape(
+                    B, -1, c.n_heads, c.head_dim)
+                return None, (k, v)
+
+            _, (xk, xv) = jax.lax.scan(prime, None, xp)
+            cache["xk"] = xk.astype(dtype)
+            cache["xv"] = xv.astype(dtype)
+        return cache
+
+    def decode_step(self, params: Dict, cache: Dict, tokens):
+        c = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        E = c.d_model
+        h = (params["embed"].astype(jnp.bfloat16)[tokens]
+             + sinusoid_pos(1, E, offset=pos[0])[None].astype(jnp.bfloat16))
+        self_p = {k.split("/")[2]: v for k, v in params.items()
+                  if k.startswith("dec/self/")}
+        cross_p = {k.split("/")[2]: v for k, v in params.items()
+                   if k.startswith("dec/cross/")}
+        mlp_p = {k.split("/")[2]: v for k, v in params.items()
+                 if k.startswith("dec/mlp/")}
+
+        def body(h, xs):
+            sp, xp, mp, k_c, v_c, xk, xv = xs
+            hn = cm.layer_norm(h, sp["norm_w"], sp["norm_b"], c.norm_eps)
+            q, k, v = self._proj_qkv(sp, hn, hn)
+            k_c = jax.lax.dynamic_update_slice(k_c, k, (0, pos[0], 0, 0))
+            v_c = jax.lax.dynamic_update_slice(v_c, v, (0, pos[0], 0, 0))
+            att = cm.gqa_attention(q, k_c, v_c, causal=False, kv_len=pos + 1)
+            h = h + jnp.einsum("bsq,qe->bse",
+                               att.reshape(B, 1, c.q_dim), sp["wo"])
+            hn = cm.layer_norm(h, xp["norm_w"], xp["norm_b"], c.norm_eps)
+            q = jnp.einsum("bse,eq->bsq", hn, xp["wq"]).reshape(
+                B, 1, c.n_heads, c.head_dim)
+            att = cm.cross_attention(q, xk, xv)
+            h = h + jnp.einsum("bsq,qe->bse",
+                               att.reshape(B, 1, c.q_dim), xp["wo"])
+            hn = cm.layer_norm(h, mp["norm_w"], mp["norm_b"], c.norm_eps)
+            h = h + cm.gelu_mlp(hn, mp["w_in"], mp["b_in"], mp["w_out"],
+                                mp["b_out"])
+            return h, (k_c, v_c)
+
+        h, (k_n, v_n) = cm.scan_layers(
+            body, h, (self_p, cross_p, mlp_p, cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        h = cm.layer_norm(h, params["dec_final_w"], params["dec_final_b"],
+                          c.norm_eps)
+        logits = jnp.einsum("bse,ve->bsv", h, params["embed"])[:, 0]
+        new_cache = dict(cache)
+        new_cache.update({"k": k_n, "v": v_n, "pos": pos + 1})
+        return logits, new_cache
+
+    # -------------------------------------------------------------- dry-run
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        frames = jax.ShapeDtypeStruct((B, c.n_frames, c.d_model),
+                                      jnp.float32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok, "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": tok, "frames": frames}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict:
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+              "frames": ("batch", "frames", "embed_act")}
+        if shape.kind == "decode":
+            ax["tokens"] = ("batch", None)
+        return {k: v for k, v in ax.items()
+                if k in self.input_specs(shape)}

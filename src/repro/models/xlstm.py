@@ -1,0 +1,355 @@
+"""xLSTM LM (sLSTM + mLSTM blocks, arXiv:2405.04517).
+
+TPU-native choices (DESIGN.md):
+  mLSTM — chunkwise-parallel matrix-memory form (the linear-attention
+          chunking): quadratic only within a chunk, O(S/W) sequential steps,
+          MXU-friendly einsums. fp32 cell arithmetic.
+  sLSTM — inherently sequential scalar memory with exponential gating and
+          max-stabilizer; lax.scan over time (this is the paper's own
+          constraint, not a port artifact).
+
+Block pattern: one sLSTM per `slstm_every` blocks (default 4), scanned over
+groups of (slstm_every-1) mLSTM blocks + 1 sLSTM block. d_ff=0 in the
+assignment ⇒ projections live inside the blocks (up-factor 2 mLSTM, post-FFN
+4/3 sLSTM), exactly the xLSTM block layout. The conv4 pre-activation of the
+reference implementation is folded away (noted deviation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models.transformer import _maybe_remat
+
+
+# ------------------------------------------------------------- mLSTM pieces
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int = 128,
+                  state=None):
+    """Chunkwise-parallel mLSTM. q,k,v (B,S,H,D); i_raw,f_raw (B,S,H).
+    Returns h (B,S,H,D) and final (C (B,H,D,D), n (B,H,D))."""
+    B, S, H, D = q.shape
+    W = min(chunk, S)
+    assert S % W == 0, "seq must divide by chunk"
+    NC = S // W
+    qf = (q.astype(jnp.float32) / jnp.sqrt(D)).reshape(B, NC, W, H, D)
+    kf = k.astype(jnp.float32).reshape(B, NC, W, H, D)
+    vf = v.astype(jnp.float32).reshape(B, NC, W, H, D)
+    li = i_raw.astype(jnp.float32).reshape(B, NC, W, H)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)).reshape(B, NC, W, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+    else:
+        C0, n0 = state
+
+    causal = jnp.tril(jnp.ones((W, W), jnp.float32))
+
+    def per_chunk(carry, xs):
+        C_p, n_p = carry
+        qc, kc, vc, lic, lfc = xs                    # (B,W,H,*)
+        b = jnp.cumsum(lfc, axis=1)                  # (B,W,H)
+        # intra-chunk decay/gate matrix  A[i,j] = exp(b_i - b_j + li_j), j<=i
+        Dm = b[:, :, None, :] - b[:, None, :, :] + lic[:, None, :, :]
+        A = jnp.exp(jnp.minimum(Dm, 30.0)) * causal[None, :, :, None]
+        qk = jnp.einsum("bihd,bjhd->bijh", qc, kc)
+        h_intra = jnp.einsum("bijh,bijh,bjhd->bihd", A, qk, vc)
+        eb = jnp.exp(jnp.minimum(b, 30.0))[..., None]          # (B,W,H,1)
+        h_inter = eb * jnp.einsum("bihd,bhde->bihe", qc, C_p)
+        n_vec = eb * n_p[:, None] + jnp.einsum("bijh,bjhd->bihd", A, kc)
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bihd,bihd->bih", qc, n_vec))[..., None], 1.0)
+        h = (h_intra + h_inter) / denom
+        # carry update
+        bW = b[:, -1, :]                                       # (B,H)
+        wj = jnp.exp(jnp.minimum(bW[:, None] - b + lic, 30.0)) # (B,W,H)
+        C_n = (jnp.exp(jnp.minimum(bW, 30.0))[..., None, None] * C_p
+               + jnp.einsum("bjh,bjhd,bjhe->bhde", wj, kc, vc))
+        n_n = (jnp.exp(jnp.minimum(bW, 30.0))[..., None] * n_p
+               + jnp.einsum("bjh,bjhd->bhd", wj, kc))
+        return (C_n, n_n), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, li, lf))
+    (C_f, n_f), hs = cm.scan_layers(per_chunk, (C0, n0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, D)
+    return h.astype(q.dtype), (C_f, n_f)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Single-token recurrence (decode). q,k,v (B,H,D); gates (B,H)."""
+    C_p, n_p = state
+    qf = q.astype(jnp.float32) / jnp.sqrt(q.shape[-1])
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    fp = jnp.exp(jax.nn.log_sigmoid(f_raw.astype(jnp.float32)))
+    ip = jnp.exp(jnp.minimum(i_raw.astype(jnp.float32), 30.0))
+    C = fp[..., None, None] * C_p + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n = fp[..., None] * n_p + ip[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))[..., None],
+                      1.0)
+    return (num / den).astype(q.dtype), (C, n)
+
+
+# ------------------------------------------------------------- sLSTM pieces
+def slstm_scan(gates, r_weights, state=None):
+    """gates (B,S,4,H,D) pre-activations (i,f,z,o); r (4,H,D,D) recurrent.
+    Stabilized exponential gating; returns h (B,S,H,D) + final state."""
+    B, S, _, H, D = gates.shape
+    if state is None:
+        c0 = jnp.zeros((B, H, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H, D), -30.0, jnp.float32)
+        h0 = jnp.zeros((B, H, D), jnp.float32)
+    else:
+        c0, n0, m0, h0 = state
+    rw = r_weights.astype(jnp.float32)
+
+    def step(carry, g_t):
+        c, n, m, h = carry
+        gi = g_t.astype(jnp.float32) + jnp.einsum("bhd,ghde->bghe", h, rw)
+        it, ft, zt, ot = gi[:, 0], gi[:, 1], gi[:, 2], gi[:, 3]
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c = fp * c + ip * jnp.tanh(zt)
+        n = fp * n + ip
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    (c, n, m, h_f), hs = jax.lax.scan(step, (c0, n0, m0, h0),
+                                      jnp.moveaxis(gates, 1, 0))
+    return (jnp.moveaxis(hs, 0, 1).astype(gates.dtype),
+            (c, n, m, h_f))
+
+
+class XLSTM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.slstm_every == 0
+        self.n_groups = cfg.n_layers // cfg.slstm_every
+        self.m_per_group = cfg.slstm_every - 1
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self) -> cm.ParamDefs:
+        c = self.cfg
+        G, M = self.n_groups, self.m_per_group
+        E, V, H = c.d_model, c.vocab, c.n_heads
+        U = 2 * E                     # mLSTM up-dim
+        Dm = U // H                   # mLSTM head dim
+        Ds = E // H                   # sLSTM head dim
+        Fs = (4 * E) // 3             # sLSTM post-FFN
+        return {
+            "embed": ((V, E), ("vocab", "embed")),
+            "final_norm": ((E,), (None,)),
+            "unembed": ((E, V), ("embed", "vocab")),
+            # mLSTM blocks, stacked (G, M, ...)
+            "m/norm": ((G, M, E), ("layers", None, None)),
+            "m/w_up": ((G, M, E, 2 * U), ("layers", None, "embed", "ffn")),
+            "m/wq": ((G, M, U, U), ("layers", None, "embed", "ffn")),
+            "m/wk": ((G, M, U, U), ("layers", None, "embed", "ffn")),
+            "m/wv": ((G, M, U, U), ("layers", None, "embed", "ffn")),
+            "m/w_if": ((G, M, U, 2 * H), ("layers", None, "embed", None)),
+            "m/out_norm": ((G, M, U), ("layers", None, None)),
+            "m/w_down": ((G, M, U, E), ("layers", None, "ffn", "embed")),
+            # sLSTM blocks, stacked (G, ...)
+            "s/norm": ((G, E), ("layers", None)),
+            "s/w_gates": ((G, E, 4 * E), ("layers", "embed", "ffn")),
+            "s/r_gates": ((G, 4, H, Ds, Ds),
+                          ("layers", None, "heads", None, None)),
+            "s/out_norm": ((G, E), ("layers", None)),
+            "s/ffn_norm": ((G, E), ("layers", None)),
+            "s/w_fin": ((G, E, Fs), ("layers", "embed", "ffn")),
+            "s/w_fout": ((G, Fs, E), ("layers", "ffn", "embed")),
+        }
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return cm.init_params(self.param_defs(), key, dtype)
+
+    # -------------------------------------------------------------- blocks
+    def _m_qkvif(self, mp, h):
+        c = self.cfg
+        B, S, E = h.shape
+        H = c.n_heads
+        U = 2 * E
+        hn = cm.rms_norm(h, mp["norm"], c.norm_eps)
+        up = jnp.einsum("bse,eu->bsu", hn, mp["w_up"])
+        z, g = jnp.split(up, 2, axis=-1)                    # (B,S,U) each
+        q = jnp.einsum("bsu,uv->bsv", z, mp["wq"]).reshape(B, S, H, U // H)
+        k = jnp.einsum("bsu,uv->bsv", z, mp["wk"]).reshape(B, S, H, U // H)
+        v = jnp.einsum("bsu,uv->bsv", z, mp["wv"]).reshape(B, S, H, U // H)
+        i_f = jnp.einsum("bsu,ug->bsg", z, mp["w_if"])
+        i_raw, f_raw = jnp.split(i_f, 2, axis=-1)           # (B,S,H)
+        return q, k, v, i_raw, f_raw, g
+
+    def _m_block(self, mp, h, state=None, step=False):
+        c = self.cfg
+        B, S, E = h.shape
+        U = 2 * E
+        q, k, v, i_raw, f_raw, g = self._m_qkvif(mp, h)
+        if step:
+            cell, new_state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                         i_raw[:, 0], f_raw[:, 0], state)
+            cell = cell[:, None]                             # (B,1,H,D)
+        else:
+            cell, new_state = mlstm_chunked(
+                q, k, v, i_raw, f_raw,
+                chunk=min(c.mlstm_chunk, S), state=state)
+        cell = cell.reshape(B, S, U)
+        cell = cm.rms_norm(cell, mp["out_norm"], c.norm_eps)
+        out = jnp.einsum("bsu,ue->bse",
+                         cell * jax.nn.silu(g.astype(jnp.float32))
+                         .astype(cell.dtype),
+                         mp["w_down"])
+        return h + out, new_state
+
+    def _s_block(self, sp, h, state=None):
+        c = self.cfg
+        B, S, E = h.shape
+        H = c.n_heads
+        Ds = E // H
+        hn = cm.rms_norm(h, sp["norm"], c.norm_eps)
+        gates = jnp.einsum("bse,eg->bsg", hn, sp["w_gates"])
+        gates = gates.reshape(B, S, 4, H, Ds)
+        cell, new_state = slstm_scan(gates, sp["r_gates"], state)
+        cell = cell.reshape(B, S, E)
+        cell = cm.rms_norm(cell, sp["out_norm"], c.norm_eps)
+        h = h + cell
+        hn = cm.rms_norm(h, sp["ffn_norm"], c.norm_eps)
+        f = jnp.einsum("bse,ef->bsf", hn, sp["w_fin"])
+        f = jax.nn.gelu(f.astype(jnp.float32)).astype(h.dtype)
+        return h + jnp.einsum("bsf,fe->bse", f, sp["w_fout"]), new_state
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params: Dict, tokens, remat: str = "full",
+                collect_state: bool = False):
+        c = self.cfg
+        h = params["embed"].astype(jnp.bfloat16)[tokens]
+        h = shard(h, ("batch", "seq", "embed_act"))
+        m_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("m/")}
+        s_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("s/")}
+
+        def group(h, gp):
+            mp_g, sp_g = gp
+
+            def m_one(hh, mp):
+                out, _ = self._m_block(mp, hh)
+                return out, None
+
+            h, _ = cm.scan_layers(m_one, h, mp_g)
+            h, _ = self._s_block(sp_g, h)
+            return shard(h, ("batch", "seq", "embed_act")), None
+
+        group = _maybe_remat(group, remat)
+        h, _ = cm.scan_layers(group, h, (m_params, s_params))
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])
+        return shard(logits, ("batch", "seq", "vocab"))
+
+    def loss(self, params, batch, remat: str = "full"):
+        logits = self.forward(params, batch["tokens"], remat=remat)
+        return cm.cross_entropy_loss(logits, batch["labels"], self.cfg.vocab)
+
+    # -------------------------------------------------------------- serving
+    def cache_specs(self, B: int, S: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        G, M, H = self.n_groups, self.m_per_group, c.n_heads
+        U = 2 * c.d_model
+        Dm = U // H
+        Ds = c.d_model // H
+        f32 = jnp.float32
+        return {
+            "m_C": jax.ShapeDtypeStruct((G, M, B, H, Dm, Dm), f32),
+            "m_n": jax.ShapeDtypeStruct((G, M, B, H, Dm), f32),
+            "s_c": jax.ShapeDtypeStruct((G, B, H, Ds), f32),
+            "s_n": jax.ShapeDtypeStruct((G, B, H, Ds), f32),
+            "s_m": jax.ShapeDtypeStruct((G, B, H, Ds), f32),
+            "s_h": jax.ShapeDtypeStruct((G, B, H, Ds), f32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "m_C": ("layers", None, "batch", "heads", None, None),
+            "m_n": ("layers", None, "batch", "heads", None),
+            "s_c": ("layers", "batch", "heads", None),
+            "s_n": ("layers", "batch", "heads", None),
+            "s_m": ("layers", "batch", "heads", None),
+            "s_h": ("layers", "batch", "heads", None),
+            "pos": ("batch",),
+        }
+
+    def init_cache(self, B: int, S: int, dtype=jnp.bfloat16):
+        return {k: (jnp.full(sp.shape, -30.0, sp.dtype) if k == "s_m"
+                    else jnp.zeros(sp.shape, sp.dtype))
+                for k, sp in self.cache_specs(B, S, dtype).items()}
+
+    def decode_step(self, params: Dict, cache: Dict, tokens):
+        c = self.cfg
+        B = tokens.shape[0]
+        h = params["embed"].astype(jnp.bfloat16)[tokens]     # (B,1,E)
+        m_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("m/")}
+        s_params = {k.split("/", 1)[1]: v for k, v in params.items()
+                    if k.startswith("s/")}
+
+        def group(h, xs):
+            mp_g, sp_g, mC, mn, sc, sn, sm, sh = xs
+
+            def m_one(hh, xs_m):
+                mp, C_p, n_p = xs_m
+                out, (C_n, n_n) = self._m_block(mp, hh, state=(C_p, n_p),
+                                                step=True)
+                return out, (C_n, n_n)
+
+            h, (mC_n, mn_n) = cm.scan_layers(m_one, h, (mp_g, mC, mn))
+            # sLSTM single step == scan of length 1
+            hn = cm.rms_norm(h, sp_g["norm"], c.norm_eps)
+            gates = jnp.einsum("bse,eg->bsg", hn, sp_g["w_gates"])
+            gates = gates.reshape(B, 1, 4, c.n_heads, -1)
+            cell, (sc_n, sn_n, sm_n, sh_n) = slstm_scan(
+                gates, sp_g["r_gates"], (sc, sn, sm, sh))
+            cell = cm.rms_norm(cell.reshape(B, 1, -1), sp_g["out_norm"],
+                               c.norm_eps)
+            h = h + cell
+            hn = cm.rms_norm(h, sp_g["ffn_norm"], c.norm_eps)
+            f = jnp.einsum("bse,ef->bsf", hn, sp_g["w_fin"])
+            f = jax.nn.gelu(f.astype(jnp.float32)).astype(h.dtype)
+            h = h + jnp.einsum("bsf,fe->bse", f, sp_g["w_fout"])
+            return h, (mC_n, mn_n, sc_n, sn_n, sm_n, sh_n)
+
+        h, (mC, mn, sc, sn, sm, sh) = cm.scan_layers(
+            group, h,
+            (m_params, s_params, cache["m_C"], cache["m_n"], cache["s_c"],
+             cache["s_n"], cache["s_m"], cache["s_h"]))
+        h = cm.rms_norm(h, params["final_norm"], c.norm_eps)
+        logits = jnp.einsum("bse,ev->bsv", h, params["unembed"])[:, 0]
+        new_cache = {"m_C": mC, "m_n": mn, "s_c": sc, "s_n": sn, "s_m": sm,
+                     "s_h": sh, "pos": cache["pos"] + 1}
+        return logits, new_cache
+
+    # -------------------------------------------------------------- dry-run
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict:
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "decode":
+            ax["tokens"] = ("batch", None)
+        return {k: v for k, v in ax.items()
+                if k in self.input_specs(shape)}

@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute_s    = HLO_flops / peak_flops            (per device)
+  memory_s     = HLO_bytes / hbm_bw                (per device)
+  collective_s = collective_bytes / ici_bw         (per device, worst link)
+
+HLO_flops / HLO_bytes come from compiled.cost_analysis() (post-SPMD, i.e.
+one device's program). collective_bytes is NOT in cost_analysis — we parse
+the optimized HLO text and sum operand payloads of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (assignment §ROOFLINE).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# --- TPU v5e target constants (assignment) ---
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# e.g.:  %ag = bf16[16,4096,320]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|[\w\[\],{}\s/]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape payload bytes per collective kind. `-start/-done`
+    async pairs are counted once (on -start; bare ops counted directly)."""
+    out = {k: 0 for k in _COLL_OPS}
+    seen_done = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            seen_done += 1
+            continue
+        out[kind] += _shape_bytes(shape_text)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    n_devices: int
+    model_flops: float = 0.0     # 6·N·D (or 6·N_active·D) GLOBAL
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.total_coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — remat/padding/dispatch waste."""
+        total_hlo = self.flops * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(model-flops time at peak) / (roofline step time) — the score."""
+        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "coll_bytes_per_device": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_s": self.step_time_s,
+            "n_devices": self.n_devices,
+        }
+
+
+def model_flops_train(cfg, n_tokens: int) -> float:
+    """6·N·D with N = active params (MoE: routed top-k only)."""
+    n = active_params(cfg)
+    return 6.0 * n * n_tokens
+
+
+def model_flops_decode(cfg, batch: int, kv_len: int) -> float:
+    """Per decode step: 2·N_active per token + attention KV reads
+    (2·2·kv_len·H·Dh·layers MACs)."""
+    n = active_params(cfg)
+    flops = 2.0 * n * batch
+    if cfg.family in ("dense", "moe", "vlm", "whisper"):
+        att = cfg.n_layers * 2 * 2 * kv_len * cfg.n_heads * cfg.head_dim
+        flops += att * batch
+    elif cfg.family == "rglru":
+        n_attn = cfg.n_layers // 3
+        att = n_attn * 2 * 2 * min(kv_len, cfg.local_window) \
+            * cfg.n_heads * cfg.head_dim
+        flops += att * batch
+    return flops
+
+
+def active_params(cfg) -> float:
+    E, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    emb = 2 * V * E
+    if cfg.family in ("dense", "vlm"):
+        per = (E * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * E
+               + 3 * E * cfg.d_ff)
+        return L * per + emb
+    if cfg.family == "moe":
+        per = (E * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * E
+               + cfg.top_k * 3 * E * cfg.d_ff + E * cfg.n_experts)
+        return L * per + emb
+    if cfg.family == "whisper":
+        attn = E * 4 * cfg.q_dim
+        mlp = 2 * E * cfg.d_ff
+        return (cfg.n_enc_layers * (attn + mlp)
+                + L * (2 * attn + mlp)) + V * E
+    if cfg.family == "xlstm":
+        U = 2 * E
+        m_per = E * 2 * U + 3 * U * U + U * 2 * cfg.n_heads + U * E
+        s_per = E * 4 * E + 4 * (E // cfg.n_heads) * E \
+            + 2 * E * ((4 * E) // 3)
+        G = L // cfg.slstm_every
+        return G * ((cfg.slstm_every - 1) * m_per + s_per) + emb
+    if cfg.family == "rglru":
+        rec = (2 * E * E + 2 * E * E + E * E) + 3 * E * cfg.d_ff
+        attn = (E * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * E
+                + 3 * E * cfg.d_ff)
+        n_attn = L // 3
+        return (L - n_attn) * rec + n_attn * attn + emb
+    raise ValueError(cfg.family)

@@ -1,0 +1,66 @@
+"""Batched serving: prefill → decode loop with KV/state caches.
+
+`ServeSession` pairs a model with a compressed-resident store: request
+contexts are fetched by read id and decoded ON DEVICE (paper §4/§6.1 — the
+consumer is device-resident, so nothing crosses the host link), then the
+decode loop emits tokens step by step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 512
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy
+
+
+class ServeSession:
+    def __init__(self, model, params, cfg: ServeConfig, store=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.store = store
+        self._decode = jax.jit(model.decode_step)
+
+    def prime(self, contexts: jnp.ndarray) -> Dict:
+        """Sequential prefill via decode steps (teacher-forced context feed).
+        contexts (B, S_ctx) int32."""
+        B, S_ctx = contexts.shape
+        cache = self.model.init_cache(B, self.cfg.max_seq)
+        logits = None
+        for t in range(S_ctx):
+            logits, cache = self._decode(self.params, cache,
+                                         contexts[:, t:t + 1])
+        return {"cache": cache, "logits": logits}
+
+    def generate(self, contexts: jnp.ndarray,
+                 max_new_tokens: Optional[int] = None) -> np.ndarray:
+        n_new = max_new_tokens or self.cfg.max_new_tokens
+        st = self.prime(contexts)
+        cache, logits = st["cache"], st["logits"]
+        toks = []
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        toks.append(cur)
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            toks.append(cur)
+        return np.asarray(jnp.concatenate(toks, axis=1))
+
+    def serve_reads(self, read_ids: List[int], ctx_bytes: int,
+                    max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """Batched requests addressed by read id: compressed-resident fetch
+        → on-device byte contexts → generate."""
+        assert self.store is not None, "no compressed-resident store attached"
+        rows = self.store.fetch_records(np.asarray(read_ids), ctx_bytes)
+        contexts = rows.astype(jnp.int32)
+        return self.generate(contexts, max_new_tokens)

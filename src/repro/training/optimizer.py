@@ -1,0 +1,76 @@
+"""Hand-rolled AdamW (no optax in this container) over flat param dicts.
+
+Moments live in fp32 regardless of param dtype (bf16 params + fp32 m/v is
+the memory model the roofline assumes: 2+4+4 = 10 B/param... with fp32
+master copies folded into v-update math instead of stored — 10 B/param
+total). Global-norm clipping, decoupled weight decay, linear-warmup cosine
+schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params: Dict) -> Dict:
+    return {
+        "m": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+        "v": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params: Dict, grads: Dict,
+                 opt: Dict) -> Tuple[Dict, Dict, Dict]:
+    step = opt["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * scale
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        decay = 0.0 if p.ndim <= 1 or "norm" in k else cfg.weight_decay
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + decay * pf)
+        new_p[k] = pf.astype(p.dtype)
+        new_m[k] = m
+        new_v[k] = v
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gn, "lr": lr}

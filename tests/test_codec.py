@@ -1,0 +1,113 @@
+"""ACEAPEX codec: roundtrip properties, serialization, format invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decoder as dec
+from repro.core import encoder as enc
+from repro.core import format as fmt
+
+
+def roundtrip(data: bytes, **kw) -> bool:
+    a = enc.encode(data, **kw)
+    out = dec.Decoder(a, backend="ref").decode_all()
+    return np.array_equal(out, np.frombuffer(data, np.uint8))
+
+
+@pytest.mark.parametrize("mode", ["ra", "global"])
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+def test_roundtrip_fastq(fastq_platinum, mode, entropy):
+    assert roundtrip(fastq_platinum[:100_000], block_size=4096, mode=mode,
+                     entropy=entropy)
+
+
+@pytest.mark.parametrize("payload", [
+    b"", b"a", b"ab" * 3, b"\x00" * 100_000,
+    bytes(range(256)) * 64, b"ACGT" * 10_000,
+])
+def test_roundtrip_edge_cases(payload):
+    if not payload:
+        payload = b"\x00"          # empty input → one empty block
+    assert roundtrip(payload, block_size=2048)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.binary(min_size=1, max_size=30_000),
+       block_size=st.sampled_from([512, 2048, 16384]))
+def test_roundtrip_property(data, block_size):
+    assert roundtrip(data, block_size=block_size)
+
+
+def test_block_self_containment(fastq_platinum):
+    """RA mode: every single block decodes alone, bit-perfect — the §4
+    position-invariance property."""
+    data = fastq_platinum[:60_000]
+    ref = np.frombuffer(data, np.uint8)
+    a = enc.encode(data, block_size=4096, mode="ra")
+    d = dec.Decoder(a, backend="ref")
+    for b in range(a.n_blocks):
+        row = np.asarray(d.decode_blocks(np.array([b])))[0]
+        s, ln = int(a.block_start[b]), int(a.block_len[b])
+        assert np.array_equal(row[:ln], ref[s:s + ln]), f"block {b}"
+
+
+def test_mode1_equals_mode2(fastq_noisy):
+    data = fastq_noisy[:50_000]
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    sel = np.arange(a.n_blocks)
+    m2 = np.asarray(d.decode_blocks(sel))
+    m1 = np.asarray(d.decode_blocks_host_entropy(sel))
+    assert np.array_equal(m1, m2)
+
+
+def test_serialization_roundtrip(fastq_platinum):
+    a = enc.encode(fastq_platinum[:30_000], block_size=4096)
+    buf = fmt.serialize(a)
+    b = fmt.deserialize(buf)
+    for f in ("words", "word_off", "n_words", "n_syms", "lanes", "n_cmds",
+              "block_start", "block_len", "block_fnv", "freqs"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert (a.block_size, a.raw_size, a.mode, a.entropy, a.file_fnv) == \
+        (b.block_size, b.raw_size, b.mode, b.entropy, b.file_fnv)
+    out = dec.Decoder(b, backend="ref").decode_all()
+    assert np.array_equal(out, np.frombuffer(fastq_platinum[:30_000],
+                                             np.uint8))
+
+
+def test_64bit_offsets():
+    """The §5 u32-overflow fix: format fields are 64-bit — offsets beyond
+    2^32 serialize/deserialize exactly (synthetic table entries; no 4 GB
+    buffer needed to prove the field width)."""
+    a = enc.encode(b"x" * 10_000, block_size=4096)
+    a.block_start = a.block_start + np.int64(2**33)   # 8 GiB offsets
+    a.raw_size = int(a.raw_size + 2**33)
+    b = fmt.deserialize(fmt.serialize(a))
+    assert np.array_equal(b.block_start, a.block_start)
+    assert b.raw_size == a.raw_size
+    assert b.block_start.dtype == np.int64
+
+
+def test_fnv_digests(fastq_platinum):
+    data = fastq_platinum[:20_000]
+    a = enc.encode(data, block_size=4096)
+    ref = np.frombuffer(data, np.uint8)
+    for bidx in range(a.n_blocks):
+        s, ln = int(a.block_start[bidx]), int(a.block_len[bidx])
+        assert int(a.block_fnv[bidx]) == fmt.fnv1a64_u64_stride(ref[s:s+ln])
+
+
+def test_ratio_regimes(fastq_platinum, fastq_noisy):
+    """Paper §3.3: PCR-free-like data compresses far better than noisy."""
+    rp = enc.encode(fastq_platinum, block_size=16384).ratio
+    rn = enc.encode(fastq_noisy, block_size=16384).ratio
+    assert rp > rn > 1.0
+
+
+def test_wavefront_matches_ra(fastq_platinum):
+    data = fastq_platinum[:40_000]
+    ref = np.frombuffer(data, np.uint8)
+    for mode in ("ra", "global"):
+        out = dec.Decoder(enc.encode(data, block_size=4096, mode=mode),
+                          backend="ref").decode_all()
+        assert np.array_equal(out, ref)

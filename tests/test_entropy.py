@@ -1,0 +1,93 @@
+"""rANS entropy stage: unit + property tests (bit-perfect is the contract)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entropy as ent
+from repro.core.format import PROB_SCALE, RANS_L
+
+
+def _freqs_for(streams):
+    hist = np.zeros(256, np.int64)
+    for s in streams:
+        if len(s):
+            hist += np.bincount(s, minlength=256)
+    return ent.normalize_freqs(hist)
+
+
+def _roundtrip_np(streams):
+    freqs = np.stack([_freqs_for(streams)] + [ent.normalize_freqs(np.zeros(256))] * 3)
+    cls = [0] * len(streams)
+    words, off, nw, ns, K = ent.rans_encode_batch(streams, cls, freqs)
+    return ent.rans_decode_batch_np(words, off, ns, K, cls, freqs)
+
+
+def test_normalize_freqs_sums_to_scale(rng):
+    hist = rng.integers(0, 1000, 256)
+    f = ent.normalize_freqs(hist)
+    assert int(f.sum()) == PROB_SCALE
+    assert np.all(f[hist > 0] >= 1)
+
+
+def test_normalize_degenerate():
+    f = ent.normalize_freqs(np.zeros(256))
+    assert int(f.sum()) == PROB_SCALE
+
+
+def test_single_symbol_stream():
+    s = np.zeros(1000, np.uint8)
+    out = _roundtrip_np([s])
+    assert np.array_equal(out[0], s)
+
+
+def test_empty_and_tiny_streams():
+    streams = [np.zeros(0, np.uint8), np.frombuffer(b"a", np.uint8).copy(),
+               np.frombuffer(b"ab", np.uint8).copy()]
+    outs = _roundtrip_np(streams)
+    for a, b in zip(streams, outs):
+        assert np.array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=0, max_size=5000))
+def test_roundtrip_property(data):
+    s = np.frombuffer(data, np.uint8).copy()
+    out = _roundtrip_np([s])
+    assert np.array_equal(out[0], s)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=st.lists(st.integers(0, 2000), min_size=1, max_size=8),
+       seed=st.integers(0, 2**31 - 1))
+def test_multi_stream_batch_property(sizes, seed):
+    rng = np.random.default_rng(seed)
+    streams = [rng.integers(0, 256, n).astype(np.uint8) for n in sizes]
+    outs = _roundtrip_np(streams)
+    for a, b in zip(streams, outs):
+        assert np.array_equal(a, b)
+
+
+def test_jnp_decode_matches_np(rng):
+    streams = [rng.integers(0, 64, n).astype(np.uint8)
+               for n in (0, 5, 100, 3000)]
+    freqs = np.stack([_freqs_for(streams)] + [ent.normalize_freqs(np.zeros(256))] * 3)
+    cls = [0] * len(streams)
+    words, off, nw, ns, K = ent.rans_encode_batch(streams, cls, freqs)
+    np_out = ent.rans_decode_batch_np(words, off, ns, K, cls, freqs)
+    rows, _ = ent.rans_decode_batch_jnp(words, off, ns, K, cls, freqs)
+    rows = np.asarray(rows)
+    for i, s in enumerate(streams):
+        got = ent.gather_stream_bytes(rows[i], len(s), int(K[i]))
+        assert np.array_equal(got, s)
+        assert np.array_equal(np_out[i], s)
+
+
+def test_compression_beats_entropy_bound_margin(rng):
+    # skewed stream: rANS should land within ~5% of the order-0 bound
+    p = np.array([.5, .25, .125, .125])
+    s = rng.choice(np.arange(4, dtype=np.uint8), size=20000, p=p)
+    freqs = np.stack([_freqs_for([s])] + [ent.normalize_freqs(np.zeros(256))] * 3)
+    words, off, nw, ns, K = ent.rans_encode_batch([s], [0], freqs)
+    bits = (int(nw[0]) * 2 + 4 * int(K[0])) * 8
+    h = -(p * np.log2(p)).sum() * len(s)
+    assert bits < h * 1.06

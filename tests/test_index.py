@@ -1,0 +1,58 @@
+"""Read→block index vs .fai baseline (paper §4.1) + residency store."""
+import numpy as np
+import pytest
+
+from repro.core import encoder as enc
+from repro.core.index import FaiIndex, ReadIndex, parse_fastq_records
+from repro.core.residency import CompressedResidentStore
+
+
+@pytest.fixture(scope="module")
+def store(fastq_platinum):
+    a = enc.encode(fastq_platinum, block_size=4096)
+    idx = ReadIndex.build(fastq_platinum, 4096)
+    return (CompressedResidentStore(a, idx, backend="ref"),
+            np.frombuffer(fastq_platinum, np.uint8), idx)
+
+
+def test_parse_fastq(fastq_platinum):
+    starts, names = parse_fastq_records(fastq_platinum)
+    assert names[0] == b"SRR0.0"    # name excludes '@' and the comment
+    assert starts[0] == 0 and int(starts[-1]) == len(fastq_platinum)
+    assert len(names) == len(starts) - 1
+
+
+def test_read_index_is_8_bytes_per_read(fastq_platinum):
+    idx = ReadIndex.build(fastq_platinum, 4096)
+    assert idx.nbytes == idx.n_reads * 8
+    assert len(idx.serialize()) == idx.n_reads * 8
+
+
+def test_index_smaller_than_fai(fastq_platinum):
+    """Paper §4.1: the read→block index is several × smaller than .fai."""
+    idx = ReadIndex.build(fastq_platinum, 4096)
+    fai = FaiIndex.build(fastq_platinum)
+    assert fai.nbytes / idx.nbytes > 3.0
+
+
+def test_fetch_read_bit_perfect(store):
+    s, ref, idx = store
+    for r in (0, 1, 57, idx.n_reads - 1):
+        lo, hi, _ = idx.lookup(r)
+        np.testing.assert_array_equal(np.asarray(s.fetch_read(r)),
+                                      ref[lo:hi])
+
+
+def test_fetch_records_batched(store):
+    s, ref, _ = store
+    ids = np.array([0, 3, 17, 99, 200])
+    rows = np.asarray(s.fetch_records(ids, 128))
+    for i, r in enumerate(ids):
+        np.testing.assert_array_equal(rows[i], ref[r * 128:(r + 1) * 128])
+
+
+def test_residency_stats(store):
+    s, ref, _ = store
+    st = s.stats()
+    assert st.compressed_device_bytes < st.raw_size
+    assert 0 < st.residency_fraction_of_raw < 1
