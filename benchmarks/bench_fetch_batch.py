@@ -1,0 +1,61 @@
+"""Batched variable-length random access: reads/s vs batch size.
+
+The serving question behind the paper's 0.362 ms single-seek number: how
+many arbitrary (variable-length FASTQ) reads can one selection decode
+serve? One `fetch_reads` call amortizes the fixed dispatch floor over the
+whole batch, so reads/s should grow with B until decode work dominates.
+Also reports the per-read loop baseline (the pre-batching path: B separate
+fetches) and the warm decoded-block LRU.
+"""
+import numpy as np
+
+from benchmarks.common import corpora, row, time_fn
+from repro.core import encoder
+from repro.core.index import ReadIndex
+from repro.core.residency import CompressedResidentStore
+
+BATCH_SIZES = (1, 16, 256)
+
+
+def main(small: bool = False):
+    buf = corpora(2000 if small else 8000)["fastq_platinum"]
+    archive = encoder.encode(buf, block_size=16384)
+    idx = ReadIndex.build(buf, archive.block_size)
+    store = CompressedResidentStore(archive, idx, backend="ref")
+    ref = np.frombuffer(buf, np.uint8)
+    rng = np.random.default_rng(0)
+
+    for B in BATCH_SIZES:
+        ids = rng.integers(0, idx.n_reads, size=B)
+        t = time_fn(lambda: store.fetch_reads(ids)[0], iters=3)
+        out, lens = store.fetch_reads(ids)
+        out, lens = np.asarray(out), np.asarray(lens)
+        lo, hi, _ = idx.lookup(int(ids[0]))
+        assert np.array_equal(out[0, :int(lens[0])], ref[lo:hi])
+        row(f"fetch_batch/B{B}", t, f"{B/t:.0f}reads/s(cpu)")
+
+    # per-read loop baseline at the largest batch: what batching replaces
+    B = BATCH_SIZES[-1]
+    ids = rng.integers(0, idx.n_reads, size=B)
+
+    def loop():
+        for r in ids:
+            store.fetch_read(int(r))
+
+    t_loop = time_fn(loop, iters=1)
+    t_batch = time_fn(lambda: store.fetch_reads(ids)[0], iters=3)
+    row(f"fetch_batch/loop_B{B}", t_loop,
+        f"batched_speedup={t_loop/t_batch:.1f}x")
+
+    # warm decoded-block LRU: hot blocks skip re-decode across calls
+    cached = CompressedResidentStore(archive, idx, backend="ref",
+                                     cache_blocks=archive.n_blocks)
+    cached.fetch_reads(ids)                  # warm
+    t_warm = time_fn(lambda: cached.fetch_reads(ids)[0], iters=3)
+    info = cached.cache_info()
+    row(f"fetch_batch/warm_lru_B{B}", t_warm,
+        f"{B/t_warm:.0f}reads/s(cpu);hits={info['hits']}")
+
+
+if __name__ == "__main__":
+    main()

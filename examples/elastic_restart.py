@@ -15,6 +15,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.data.fastq import make_fastq
 from repro.data.pipeline import CompressedResidentDataLoader, PipelineConfig
@@ -46,8 +47,7 @@ def main():
 
         # --- restart on a smaller mesh: half the devices ---
         half = max(1, n // 2)
-        mesh = jax.make_mesh((half,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((half,), ("data",))
         shardings = {f"params.{k}": NamedSharding(mesh, P())
                      for k in state["params"]}
         restored = elastic_reshard(ck, shardings)

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# One-command tier-1 reproduction (ROADMAP.md "Tier-1 verify").
+#
+#   scripts/ci.sh            # full suite
+#   scripts/ci.sh -k codec   # any extra pytest args pass through
+#
+# Works fully offline: when `hypothesis` is absent the property tests run
+# through tests/_hypothesis_compat.py instead of failing collection.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -17,19 +17,49 @@ import numpy as np
 
 
 def parse_fastq_records(data: bytes) -> Tuple[np.ndarray, List[bytes]]:
-    """Record start offsets (u64[n_reads+1], sentinel end) + read names."""
+    """Record start offsets (u64[n_reads+1], sentinel end) + read names.
+
+    EOF counts as the final line terminator, so FASTQ without a trailing
+    newline parses identically. Empty input is zero records (sentinel-only
+    starts), not an error.
+    """
+    if not data:
+        return np.zeros(1, np.uint64), []
     arr = np.frombuffer(data, np.uint8)
     nl = np.flatnonzero(arr == ord(b"\n"))
-    if nl.size % 4:
-        raise ValueError("truncated FASTQ (line count not a multiple of 4)")
-    line_starts = np.concatenate([[0], nl[:-1] + 1])
+    ends = nl if data.endswith(b"\n") else np.concatenate([nl, [len(data)]])
+    if ends.size % 4:
+        raise ValueError(
+            f"truncated FASTQ: {ends.size} lines is not a multiple of 4 "
+            "(each record is @name / sequence / + / quality)")
+    line_starts = np.concatenate([[0], ends[:-1] + 1])
     rec_starts = line_starts[0::4]
     names = []
-    for s in rec_starts:
-        e = data.index(b"\n", s)
+    for i, s in enumerate(rec_starts):
+        e = int(ends[4 * i])
         names.append(data[s + 1:e].split(b" ")[0])
     starts = np.concatenate([rec_starts, [len(data)]]).astype(np.uint64)
     return starts, names
+
+
+def split_starts(starts: np.ndarray,
+                 block_size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """u64 absolute offsets → (block i32, in-block offset i32).
+
+    The device-resident form of the start table: jax silently narrows
+    int64 arrays to int32 when x64 is disabled, which truncates offsets
+    in archives ≥ 2 GiB. Block ids and in-block offsets each fit i32
+    individually (offset = block * block_size + rem in 64-bit), so the
+    split table is lossless for any archive whose block COUNT fits i32 —
+    petabytes at practical block sizes.
+    """
+    s = np.asarray(starts).astype(np.uint64)
+    blk = s // np.uint64(block_size)
+    if blk.size and int(blk.max()) >= 2**31:
+        raise OverflowError(
+            f"block id {int(blk.max())} exceeds int32; raise block_size")
+    rem = (s - blk * np.uint64(block_size)).astype(np.int32)
+    return blk.astype(np.int32), rem
 
 
 @dataclasses.dataclass

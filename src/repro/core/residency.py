@@ -5,25 +5,36 @@ demand in one kernel launch without touching the rest. This is the direct
 answer to the D2H-ceiling argument of §6.1: the consumer is device-resident,
 so decoded bytes never cross the host link.
 
-Batched request fetch (`fetch_records`) is the serving / data-pipeline
-entry point: N random records → unique covering blocks → ONE selection
-decode → per-record gather. For fixed-size records the whole fetch is a
-single jitted gather pipeline (the training input path).
+Batched random access (`fetch_reads`) is the serving / data-pipeline entry
+point: N read ids — arbitrary, variable-length FASTQ reads — flow through
+ONE pipeline:
+
+    ids → start-table lookup (device-resident, int32 block + in-block
+    offset pairs: lossless for ≥ 2 GiB archives where a flat int32 table
+    truncates) → covering-block computation → unique-block selection
+    decode → ragged per-read gather into a padded (B, max_len) byte matrix
+    plus a length vector
+
+entirely on device. `fetch_read` (single read) and `fetch_records`
+(fixed-size records, the training input path) are thin views over the same
+pipeline. An optional decoded-block LRU cache makes hot blocks skip
+re-decode across calls; the gather stage stays jitted either way.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.decoder import Decoder
+from repro.core.decoder import Decoder, _decode_sel_core
 from repro.core.format import Archive
-from repro.core.index import ReadIndex
+from repro.core.index import ReadIndex, split_starts
 
 
 @dataclasses.dataclass
@@ -37,17 +48,122 @@ class ResidencyStats:
         return self.compressed_device_bytes / max(1, self.raw_size)
 
 
+# --------------------------------------------------------------- jitted core
+def _gather_reads_core(rows: jnp.ndarray, row_map: jnp.ndarray,
+                       local: jnp.ndarray, lengths: jnp.ndarray,
+                       block_size: int, max_len: int) -> jnp.ndarray:
+    """(U, block_size) decoded rows + per-read covering-row map → padded
+    (B, max_len) u8. The ragged gather: each read pulls its bytes out of
+    its covering rows at its in-block offset; beyond-length tail is 0."""
+    B, span = row_map.shape
+    rec = rows[row_map]                         # (B, span, block_size)
+    flat = rec.reshape(B, span * block_size)
+    cols = local[:, None] + jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    cols = jnp.minimum(cols, span * block_size - 1)
+    out = jnp.take_along_axis(flat, cols, axis=1)
+    mask = jnp.arange(max_len, dtype=jnp.int32)[None, :] < lengths[:, None]
+    return jnp.where(mask, out, 0).astype(jnp.uint8)
+
+
+_gather_jit = partial(jax.jit,
+                      static_argnames=("block_size", "max_len"))(
+                          _gather_reads_core)
+
+
+def _fetch_dev_core(arrays, b0, local, lengths, end_blk, da_meta, backend,
+                    geom):
+    """Device-side tail of the pipeline: covering blocks → unique selection
+    decode → ragged gather. geom = (block_size, n_blocks, max_len,
+    max_span, u_cap) — all static."""
+    block_size, n_blocks, max_len, max_span, u_cap = geom
+    blocks = b0[:, None] + jnp.arange(max_span, dtype=jnp.int32)[None, :]
+    # slots past a read's last covering block collapse onto its first
+    # block, so they dedup away instead of decoding strangers
+    blocks = jnp.where(blocks < end_blk[:, None], blocks, b0[:, None])
+    blocks = jnp.clip(blocks, 0, n_blocks - 1)
+    uniq, inv = jnp.unique(blocks.reshape(-1), return_inverse=True,
+                           size=u_cap, fill_value=0)
+    mode = da_meta[5]
+    if mode == "global":
+        # wavefront archives decode whole-prefix by construction
+        flat = _decode_sel_core(arrays, jnp.arange(n_blocks, dtype=jnp.int32),
+                                da_meta, backend)
+        rows = flat.reshape(n_blocks, block_size)[uniq]
+    else:
+        rows = _decode_sel_core(arrays, uniq.astype(jnp.int32), da_meta,
+                                backend)
+    row_map = inv.reshape(b0.shape[0], max_span).astype(jnp.int32)
+    return _gather_reads_core(rows, row_map, local, lengths, block_size,
+                              max_len)
+
+
+def _fetch_reads_core(arrays, starts_blk, starts_rem, ids, da_meta, backend,
+                     geom):
+    """ids → (padded reads, lengths), start-table lookup on device."""
+    block_size = geom[0]
+    ids = ids.astype(jnp.int32)
+    b0 = starts_blk[ids]
+    r0 = starts_rem[ids]
+    b1 = starts_blk[ids + 1]
+    r1 = starts_rem[ids + 1]
+    lengths = (b1 - b0) * block_size + (r1 - r0)
+    end_blk = b1 + (r1 > 0).astype(jnp.int32)      # exclusive covering end
+    out = _fetch_dev_core(arrays, b0, r0, lengths, end_blk, da_meta,
+                          backend, geom)
+    return out, lengths
+
+
+_fetch_reads_jit = partial(jax.jit,
+                           static_argnames=("da_meta", "backend", "geom"))(
+                               _fetch_reads_core)
+_fetch_dev_jit = partial(jax.jit,
+                         static_argnames=("da_meta", "backend", "geom"))(
+                             _fetch_dev_core)
+
+
+def _pad_pow2(ids: np.ndarray) -> np.ndarray:
+    """Pad a request batch to the next power of two (bounded jit variants);
+    pad slots repeat the last id so they add no unique blocks."""
+    n = ids.size
+    cap = 1 << max(0, n - 1).bit_length() if n > 1 else 1
+    if cap == n:
+        return ids
+    return np.concatenate([ids, np.full(cap - n, ids[-1], ids.dtype)])
+
+
 class CompressedResidentStore:
-    """Archive + index resident on device; decode-on-demand reads."""
+    """Archive + index resident on device; decode-on-demand reads.
+
+    cache_blocks > 0 enables a decoded-block LRU: hot blocks skip
+    re-decode across fetch calls (serving working sets are Zipfian; the
+    cache bounds decode work to the cold tail). Mode 1 fetches
+    (`mode2=False`: host entropy decode, device match resolution) always
+    run through the staged path since their entropy stage lives on host.
+    """
 
     def __init__(self, archive: Archive, index: Optional[ReadIndex] = None,
-                 backend: str = "auto"):
+                 backend: str = "auto", cache_blocks: int = 0):
         self.decoder = Decoder(archive, backend=backend)
         self.index = index
         self.block_size = archive.block_size
-        self._starts_dev = (jnp.asarray(index.starts.astype(np.int64)
-                                        .astype(np.int32))
-                            if index is not None else None)
+        self._cache_cap = int(cache_blocks)
+        self._cache: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        if index is not None:
+            blk, rem = split_starts(index.starts, self.block_size)
+            self._starts_blk = jnp.asarray(blk)       # i32[n_reads + 1]
+            self._starts_rem = jnp.asarray(rem)       # i32[n_reads + 1]
+            self._starts64 = index.starts.astype(np.int64)
+            lens = np.diff(self._starts64)
+            self._max_len = max(int(lens.max(initial=1)), 1)
+            b0 = self._starts64[:-1] // self.block_size
+            eb = -(-self._starts64[1:] // self.block_size)
+            self._max_span = max(int((eb - b0).max(initial=1)), 1)
+        else:
+            self._starts_blk = self._starts_rem = None
+            self._starts64 = None
+            self._max_len = self._max_span = 1
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> ResidencyStats:
@@ -57,37 +173,139 @@ class CompressedResidentStore:
             n_blocks=self.decoder.da.n_blocks,
         )
 
+    def cache_info(self) -> dict:
+        return {"capacity": self._cache_cap, "resident": len(self._cache),
+                "hits": self.cache_hits, "misses": self.cache_misses}
+
+    # ------------------------------------------------------------ internals
+    def _geom(self, batch: int, max_len: int, max_span: int) -> tuple:
+        n_blocks = self.decoder.da.n_blocks
+        return (self.block_size, n_blocks, max_len, max_span,
+                min(batch * max_span, n_blocks))
+
+    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
+        """(U,) unique block ids → (U, block_size) decoded rows, through the
+        LRU when enabled."""
+        decode = (self.decoder.decode_blocks if mode2
+                  else self.decoder.decode_blocks_host_entropy)
+        if self._cache_cap == 0:
+            # pad the selection to a power of two so random batches don't
+            # retrace the decode kernels for every distinct unique count
+            return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
+        cache = self._cache
+        missing = [int(b) for b in uniq if int(b) not in cache]
+        if missing:
+            self.cache_misses += len(missing)
+            rows = decode(_pad_pow2(np.asarray(missing, np.int32)))
+            for i, b in enumerate(missing):
+                cache[b] = rows[i]
+        self.cache_hits += len(uniq) - len(missing)
+        for b in uniq:
+            cache.move_to_end(int(b))
+        out = jnp.stack([cache[int(b)] for b in uniq])
+        # evict AFTER assembling: a single call may need more blocks than
+        # the capacity, and those must all be live until gathered
+        while len(cache) > self._cache_cap:
+            cache.popitem(last=False)
+        return out
+
+    def _fetch_staged(self, starts: np.ndarray, lengths: np.ndarray,
+                      max_len: int, max_span: int,
+                      mode2: bool) -> jnp.ndarray:
+        """Host-orchestrated variant of the pipeline (LRU cache / Mode 1):
+        covering-block set on host, decode via `_rows_for_blocks`, then the
+        same jitted ragged gather. Bytes stay on device throughout."""
+        bs = self.block_size
+        n_blocks = self.decoder.da.n_blocks
+        b0 = starts // bs
+        r0 = (starts - b0 * bs).astype(np.int32)
+        end_blk = -(-(starts + lengths) // bs)
+        cover = b0[:, None] + np.arange(max_span, dtype=np.int64)[None, :]
+        cover = np.where(cover < end_blk[:, None], cover, b0[:, None])
+        cover = np.clip(cover, 0, n_blocks - 1)
+        uniq = np.unique(cover)
+        rows = self._rows_for_blocks(uniq, mode2)
+        row_map = np.searchsorted(uniq, cover).astype(np.int32)
+        return _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
+                           jnp.asarray(lengths.astype(np.int32)),
+                           block_size=bs, max_len=max_len)
+
     # -------------------------------------------------------------- lookups
-    def fetch_read(self, r: int) -> np.ndarray:
-        """Single-read random access: index lookup + covering-block decode."""
-        s, e, _ = self.index.lookup(r)
-        return self.decoder.decode_range(s, e)
+    def fetch_reads(self, ids: Sequence[int], mode2: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched variable-length random access.
+
+        (B,) read ids → ((B, max_read_len) u8 zero-padded reads,
+        (B,) i32 lengths) in one selection decode. Requires a ReadIndex.
+        """
+        assert self.index is not None, "fetch_reads requires a ReadIndex"
+        ids_np = np.asarray(ids, np.int64).reshape(-1)
+        B = ids_np.size
+        if B and (ids_np.min() < 0 or ids_np.max() >= self.index.n_reads):
+            raise IndexError(
+                f"read id out of range [0, {self.index.n_reads}): "
+                f"{int(ids_np.min())}..{int(ids_np.max())}")
+        if B == 0:
+            return (jnp.zeros((0, self._max_len), jnp.uint8),
+                    jnp.zeros((0,), jnp.int32))
+        padded = _pad_pow2(ids_np)
+        geom = self._geom(padded.size, self._max_len, self._max_span)
+        if mode2 and self._cache_cap == 0:
+            out, lens = _fetch_reads_jit(
+                self.decoder.arrays, self._starts_blk, self._starts_rem,
+                jnp.asarray(padded, jnp.int32),
+                da_meta=self.decoder._meta(padded.size),
+                backend=self.decoder.backend, geom=geom)
+        else:
+            starts = self._starts64[padded]
+            lens_np = self._starts64[padded + 1] - starts
+            out = self._fetch_staged(starts, lens_np, self._max_len,
+                                     self._max_span, mode2)
+            lens = jnp.asarray(lens_np.astype(np.int32))
+        return out[:B], lens[:B]
+
+    def fetch_read(self, r: int, mode2: bool = True) -> np.ndarray:
+        """Single-read random access: the B=1 case of `fetch_reads`."""
+        out, lens = self.fetch_reads(np.array([r], np.int64), mode2=mode2)
+        return np.asarray(out[0])[:int(lens[0])]
 
     def fetch_block_range(self, b0: int, b1: int) -> jnp.ndarray:
         """Position-invariant block-range decode (stays on device)."""
         sel = np.arange(b0, b1)
         return self.decoder.decode_blocks(sel)
 
-    def fetch_records(self, ids: Sequence[int],
-                      record_bytes: int) -> jnp.ndarray:
-        """Batched fixed-record fetch: (B,) ids → (B, record_bytes) u8,
-        decoded on device from only the covering blocks."""
-        ids = np.asarray(ids, np.int64)
+    def fetch_records(self, ids: Sequence[int], record_bytes: int,
+                      mode2: bool = True) -> jnp.ndarray:
+        """Batched fixed-record fetch: (B,) ids → (B, record_bytes) u8.
+        Same pipeline as `fetch_reads` with arithmetic start offsets, so it
+        needs no index (the tokenized-corpus training input path)."""
+        ids_np = np.asarray(ids, np.int64).reshape(-1)
+        B = ids_np.size
+        raw = self.decoder.da.raw_size
+        if B and (ids_np.min() < 0
+                  or (int(ids_np.max()) + 1) * record_bytes > raw):
+            raise IndexError(
+                f"record id out of range for {raw}-byte archive: "
+                f"{int(ids_np.min())}..{int(ids_np.max())} × {record_bytes}B")
+        if B == 0:
+            return jnp.zeros((0, record_bytes), jnp.uint8)
+        padded = _pad_pow2(ids_np)
         bs = self.block_size
-        starts = ids * record_bytes
-        b0 = starts // bs
-        b1 = -(-(starts + record_bytes) // bs)
-        span = int((b1 - b0).max())          # blocks per record (uniform pad)
-        # unique covering blocks → one decode
-        blocks = (b0[:, None] + np.arange(span)[None, :])
-        blocks = np.clip(blocks, 0, self.decoder.da.n_blocks - 1)
-        uniq, inv = np.unique(blocks, return_inverse=True)
-        rows = self.decoder.decode_blocks(uniq.astype(np.int32))
-        rows = rows.reshape(len(uniq), bs)
-        # per-record gather
-        inv = inv.reshape(len(ids), span)
-        rec_rows = rows[jnp.asarray(inv)]            # (B, span, bs)
-        flat = rec_rows.reshape(len(ids), span * bs)
-        local = jnp.asarray((starts - b0 * bs).astype(np.int32))
-        cols = local[:, None] + jnp.arange(record_bytes, dtype=jnp.int32)
-        return jnp.take_along_axis(flat, cols, axis=1)
+        starts = padded * record_bytes
+        lengths = np.full(padded.size, record_bytes, np.int64)
+        max_span = record_bytes // bs + 2   # worst case straddles +1 block
+        geom = self._geom(padded.size, record_bytes, max_span)
+        if mode2 and self._cache_cap == 0:
+            b0 = starts // bs
+            r0 = (starts - b0 * bs).astype(np.int32)
+            end_blk = -(-(starts + record_bytes) // bs)
+            out = _fetch_dev_jit(
+                self.decoder.arrays, jnp.asarray(b0.astype(np.int32)),
+                jnp.asarray(r0), jnp.asarray(lengths.astype(np.int32)),
+                jnp.asarray(end_blk.astype(np.int32)),
+                da_meta=self.decoder._meta(padded.size),
+                backend=self.decoder.backend, geom=geom)
+        else:
+            out = self._fetch_staged(starts, lengths, record_bytes, max_span,
+                                     mode2)
+        return out[:B]

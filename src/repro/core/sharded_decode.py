@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.decoder import Decoder, _decode_sel_core
 
 
@@ -42,9 +43,9 @@ def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
     backend = dec.backend
     arrays = dec.arrays
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(jax.tree.map(lambda _: P(), arrays), P(axes)),
-             out_specs=P(axes), check_vma=False)
+             out_specs=P(axes))
     def _run(arr, sel_shard):
         return _decode_sel_core(arr, sel_shard, meta, backend)
 

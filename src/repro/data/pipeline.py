@@ -34,6 +34,8 @@ class PipelineConfig:
     block_size: int = 16 * 1024
     entropy: str = "rans"
     seed: int = 0
+    cache_blocks: int = 0     # decoded-block LRU capacity (0 = off); hot
+                              # blocks skip re-decode across batches
 
 
 class CompressedResidentDataLoader:
@@ -52,7 +54,8 @@ class CompressedResidentDataLoader:
         archive = encode(corpus, block_size=cfg.block_size,
                          mode="ra", entropy=cfg.entropy)
         index = ReadIndex.fixed_records(n_rec, rec, cfg.block_size)
-        self.store = CompressedResidentStore(archive, index, backend=backend)
+        self.store = CompressedResidentStore(archive, index, backend=backend,
+                                             cache_blocks=cfg.cache_blocks)
         self.n_records = n_rec
         self.record_bytes = rec
         self._rng = np.random.default_rng(cfg.seed)

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import SHAPES_BY_NAME, all_configs, get_config
 from repro.configs.base import ShapeConfig
 from repro.distributed.sharding import spec_for, make_rules
+from repro.compat import cost_analysis, mesh_context
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.models import common as cm
 from repro.models.registry import build_model
@@ -122,7 +123,7 @@ def _measure_cell(cfg, d: int, shape_name: str, mesh, remat, rules,
     set_active_rules(rules)
     cm_mod.set_attn_impl("blockwise", 1024)
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             compiled = jax.jit(fn, in_shardings=in_sh,
                                out_shardings=out_sh,
                                donate_argnums=donate).lower(*args).compile()
@@ -130,7 +131,7 @@ def _measure_cell(cfg, d: int, shape_name: str, mesh, remat, rules,
         cm_mod.set_unroll_scans(False)
         set_active_rules(None)
         cm_mod.set_attn_impl("full")
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     coll = rl.collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -310,7 +311,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     set_active_rules(rules)
     cm.set_attn_impl("blockwise", 1024)   # §Perf iteration 6 default
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -329,7 +330,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         coll = {k[5:]: int(v) for k, v in ext.items()
                 if k.startswith("coll_")}
     else:  # raw (scan bodies counted once — methodology note applies)
-        cost = compiled.cost_analysis()
+        cost = cost_analysis(compiled)
         coll = rl.collective_bytes(hlo)
 
     if shape.kind == "train":

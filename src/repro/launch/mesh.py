@@ -1,28 +1,28 @@
 """Production mesh builders (assignment MULTI-POD DRY-RUN §1).
 
 Functions, not module-level constants: importing this module never touches
-jax device state.
+jax device state. Mesh construction goes through `repro.compat` so the
+builders work on jax versions with and without `jax.sharding.AxisType`.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh, mesh_context  # noqa: F401 (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Whatever this host has (tests/examples): (n/model, model)."""
     n = len(jax.devices())
     dp = max(1, n // model_parallel)
-    return jax.make_mesh((dp, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((dp, model_parallel), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -1,5 +1,9 @@
 """Serving launcher: batched requests over a compressed-resident corpus.
 
+Requests queue in a `ReadBatcher` and are coalesced into ONE batched
+variable-length `fetch_reads` selection decode (the §4 random-access path
+at serving batch sizes), then generation runs on the fetched contexts.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --requests 16 --new-tokens 16
 """
@@ -16,7 +20,7 @@ from repro.core.index import ReadIndex
 from repro.core.residency import CompressedResidentStore
 from repro.data.fastq import make_fastq
 from repro.models.registry import build_model
-from repro.serving.serve_step import ServeConfig, ServeSession
+from repro.serving.serve_step import ReadBatcher, ServeConfig, ServeSession
 
 
 def main():
@@ -25,6 +29,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--ctx-bytes", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--cache-blocks", type=int, default=64,
+                    help="decoded-block LRU capacity (0 disables)")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -37,20 +43,31 @@ def main():
     corpus = make_fastq("platinum", n_reads=3000, seed=0)
     archive = encoder.encode(corpus, block_size=16 * 1024)
     store = CompressedResidentStore(
-        archive, ReadIndex.build(corpus, archive.block_size))
+        archive, ReadIndex.build(corpus, archive.block_size),
+        cache_blocks=args.cache_blocks)
     st = store.stats()
     print(f"resident: {st.compressed_device_bytes:,}B compressed of "
           f"{st.raw_size:,}B ({st.residency_fraction_of_raw:.1%})")
+
+    # ---- batch endpoint: queued requests → one coalesced fetch ----
+    batcher = ReadBatcher(store, max_batch=max(args.requests, 256))
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, store.index.n_reads, size=args.requests)
+    tickets = [batcher.submit(r) for r in ids]
+    t0 = time.perf_counter()
+    reads = batcher.flush()
+    t_fetch = time.perf_counter() - t0
+    print(f"{len(tickets)} queued requests coalesced into "
+          f"{batcher.flushes} fetch(es): {t_fetch*1e3:.1f} ms "
+          f"({len(tickets)/t_fetch:.0f} reads/s) cache={store.cache_info()}")
+    assert all(len(reads[t]) > 0 for t in tickets)
 
     sess = ServeSession(model, params,
                         ServeConfig(max_seq=args.ctx_bytes + args.new_tokens,
                                     max_new_tokens=args.new_tokens),
                         store=store)
-    rng = np.random.default_rng(0)
-    ids = rng.integers(0, store.index.n_reads,
-                       size=args.requests).tolist()
     t0 = time.perf_counter()
-    toks = sess.serve_reads(ids, ctx_bytes=args.ctx_bytes)
+    toks = sess.serve_reads(ids.tolist(), ctx_bytes=args.ctx_bytes)
     dt = time.perf_counter() - t0
     total_new = toks.shape[0] * toks.shape[1]
     print(f"{args.requests} requests × {args.new_tokens} tokens in "

@@ -4,16 +4,76 @@
 contexts are fetched by read id and decoded ON DEVICE (paper §4/§6.1 — the
 consumer is device-resident, so nothing crosses the host link), then the
 decode loop emits tokens step by step.
+
+`ReadBatcher` is the batch endpoint in front of the store: requests queue
+as they arrive and one `flush()` coalesces them into a single
+`fetch_reads` selection decode — N queued random reads cost one kernel
+pipeline, not N host round-trips.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    read_id: int
+
+
+class ReadBatcher:
+    """Coalesces queued read requests into batched `fetch_reads` calls.
+
+    submit(read_id) → ticket; flush() resolves every pending ticket with
+    the read's exact bytes, issuing one selection decode per `max_batch`
+    requests (one total when the queue fits the batch).
+    """
+
+    def __init__(self, store, max_batch: int = 256):
+        self.store = store
+        self.max_batch = int(max_batch)
+        self._queue: List[_Pending] = []
+        self._next_ticket = 0
+        self.flushes = 0
+        self.served = 0
+
+    def submit(self, read_id: int) -> int:
+        read_id = int(read_id)
+        n = self.store.index.n_reads
+        if not 0 <= read_id < n:       # reject at the door: a bad id must
+            raise IndexError(          # not poison a whole flushed batch
+                f"read id {read_id} out of range [0, {n})")
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append(_Pending(t, read_id))
+        return t
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self, mode2: bool = True) -> Dict[int, np.ndarray]:
+        """→ {ticket: read bytes (u8, exact length)} for all queued
+        requests."""
+        out: Dict[int, np.ndarray] = {}
+        while self._queue:
+            batch = self._queue[:self.max_batch]
+            ids = np.asarray([p.read_id for p in batch], np.int64)
+            rows, lens = self.store.fetch_reads(ids, mode2=mode2)
+            # dequeue only after the fetch succeeds: a failure leaves
+            # every pending ticket intact for a retry flush
+            self._queue = self._queue[self.max_batch:]
+            rows, lens = np.asarray(rows), np.asarray(lens)
+            for i, p in enumerate(batch):
+                out[p.ticket] = rows[i, :int(lens[i])]
+            self.flushes += 1
+            self.served += len(batch)
+        return out
 
 
 @dataclasses.dataclass
@@ -59,8 +119,22 @@ class ServeSession:
     def serve_reads(self, read_ids: List[int], ctx_bytes: int,
                     max_new_tokens: Optional[int] = None) -> np.ndarray:
         """Batched requests addressed by read id: compressed-resident fetch
-        → on-device byte contexts → generate."""
+        → on-device byte contexts → generate.
+
+        With a ReadIndex attached, ids address actual variable-length
+        reads (one batched `fetch_reads`, truncated/zero-padded to
+        `ctx_bytes`); otherwise ids address fixed `ctx_bytes` records.
+        """
         assert self.store is not None, "no compressed-resident store attached"
-        rows = self.store.fetch_records(np.asarray(read_ids), ctx_bytes)
+        ids = np.asarray(read_ids, np.int64)
+        if getattr(self.store, "index", None) is not None:
+            rows, _ = self.store.fetch_reads(ids)
+            if rows.shape[1] >= ctx_bytes:
+                rows = rows[:, :ctx_bytes]
+            else:
+                rows = jnp.pad(rows,
+                               ((0, 0), (0, ctx_bytes - rows.shape[1])))
+        else:
+            rows = self.store.fetch_records(ids, ctx_bytes)
         contexts = rows.astype(jnp.int32)
         return self.generate(contexts, max_new_tokens)

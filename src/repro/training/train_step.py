@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
 from repro.training import grad_compress as gc
 
@@ -53,14 +54,13 @@ def make_manual_dp_step(model, opt_cfg: AdamWConfig, mesh,
 
     def step(state: Dict, batch: Dict, key) -> Tuple[Dict, Dict]:
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), state),
                       jax.tree.map(lambda _: P(dp_axes), batch),
                       P()),
             out_specs=(jax.tree.map(lambda _: P(), state),
                        jax.tree.map(lambda _: P(),
-                                    {"loss": 0., "grad_norm": 0., "lr": 0.})),
-            check_vma=False)
+                                    {"loss": 0., "grad_norm": 0., "lr": 0.})))
         def _inner(st, local_batch, k):
             def loss_fn(p):
                 return model.loss(p, local_batch, remat=remat)

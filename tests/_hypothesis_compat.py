@@ -1,0 +1,136 @@
+"""Offline fallback for `hypothesis` (not installable in this container).
+
+Implements just the surface the test suite uses — `given`, `settings`,
+and the strategies `binary`, `integers`, `lists`, `sampled_from`, `data`
+— as a seeded-random example generator with a fixed example budget.
+Deterministic per test (seeded from the test's qualified name), so
+failures reproduce run-to-run. When the real package is installed the
+test modules import it instead; this shim only keeps the property tests
+collectable and meaningful offline.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label: str):
+        self._draw_fn = draw_fn
+        self.label = label
+
+    def draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+    def __repr__(self):
+        return self.label
+
+
+class _DataObject:
+    """The object `st.data()` hands to the test body for interactive draws."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rnd)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 1024) -> _Strategy:
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            # bias towards structured bytes half the time: repetitive
+            # payloads exercise the LZ match path, uniform bytes the
+            # literal path
+            if r.random() < 0.5 or n == 0:
+                return r.randbytes(n)
+            unit = r.randbytes(r.randint(1, max(1, min(16, n))))
+            return (unit * (n // len(unit) + 1))[:n]
+        return _Strategy(draw, f"binary({min_size}, {max_size})")
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 16) -> _Strategy:
+        return _Strategy(
+            lambda r: [elements.draw(r)
+                       for _ in range(r.randint(min_size, max_size))],
+            f"lists({elements.label}, {min_size}, {max_size})")
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda r: r.choice(options),
+                         f"sampled_from({options!r})")
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Strategy(lambda r: _DataObject(r), "data()")
+
+
+st = strategies
+
+
+def given(*strat_args, **strat_kwargs):
+    """Right-aligns positional strategies onto the test's parameters (the
+    hypothesis convention); remaining parameters stay visible to pytest as
+    fixtures via `__signature__`."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        pos_names = params[len(params) - len(strat_args):] if strat_args \
+            else []
+        mapping = dict(zip(pos_names, strat_args))
+        mapping.update(strat_kwargs)
+        fixture_names = [p for p in params if p not in mapping]
+        conf = {"max_examples": DEFAULT_MAX_EXAMPLES}
+        seed_base = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            bound = dict(zip(fixture_names, args))
+            bound.update(kwargs)
+            for ex in range(conf["max_examples"]):
+                rnd = random.Random((seed_base << 20) + ex)
+                drawn = {k: s.draw(rnd) for k, s in mapping.items()}
+                try:
+                    fn(**bound, **drawn)
+                except Exception as e:
+                    shown = {k: (f"<{len(v)} bytes>"
+                                 if isinstance(v, bytes) and len(v) > 64
+                                 else v)
+                             for k, v in drawn.items()}
+                    raise AssertionError(
+                        f"falsifying example #{ex} "
+                        f"(seed {seed_base}): {shown!r}") from e
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[p] for p in fixture_names])
+        wrapper._shim_settings = conf
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """`@settings(...)` applied above `@given(...)`: adjusts the example
+    budget of the wrapped runner; everything else is accepted and ignored."""
+
+    def deco(fn):
+        if hasattr(fn, "_shim_settings"):
+            fn._shim_settings["max_examples"] = max_examples
+        return fn
+
+    return deco

@@ -1,7 +1,10 @@
 """ACEAPEX codec: roundtrip properties, serialization, format invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # offline container - seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import decoder as dec
 from repro.core import encoder as enc

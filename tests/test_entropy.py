@@ -1,7 +1,10 @@
 """rANS entropy stage: unit + property tests (bit-perfect is the contract)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # offline container - seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import entropy as ent
 from repro.core.format import PROB_SCALE, RANS_L

@@ -1,0 +1,180 @@
+"""Batched variable-length random-access engine (`fetch_reads`) + the
+decoded-block LRU + the serving batch endpoint."""
+import numpy as np
+import pytest
+
+from repro.core import encoder as enc
+from repro.core.index import ReadIndex
+from repro.core.residency import CompressedResidentStore
+from repro.serving.serve_step import ReadBatcher
+
+
+@pytest.fixture(scope="module")
+def store(fastq_platinum):
+    a = enc.encode(fastq_platinum, block_size=4096)
+    idx = ReadIndex.build(fastq_platinum, 4096)
+    return (CompressedResidentStore(a, idx, backend="ref"),
+            np.frombuffer(fastq_platinum, np.uint8), idx)
+
+
+def _check_batch(s, ref, idx, ids, **kw):
+    out, lens = s.fetch_reads(ids, **kw)
+    out, lens = np.asarray(out), np.asarray(lens)
+    assert out.dtype == np.uint8 and out.shape[0] == len(ids)
+    for i, r in enumerate(ids):
+        lo, hi, _ = idx.lookup(int(r))
+        assert lens[i] == hi - lo
+        np.testing.assert_array_equal(out[i, :hi - lo], ref[lo:hi])
+        assert not out[i, hi - lo:].any()      # zero padding past length
+    return out, lens
+
+
+def test_fetch_reads_bit_perfect_batch_256(store):
+    """Acceptance: ≥256 variable-length reads in one selection decode,
+    verified read-by-read against per-read fetch_read."""
+    s, ref, idx = store
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, idx.n_reads, size=256)   # duplicates included
+    out, lens = _check_batch(s, ref, idx, ids)
+    for i in (0, 100, 255):
+        np.testing.assert_array_equal(out[i, :int(lens[i])],
+                                      s.fetch_read(int(ids[i])))
+
+
+def test_fetch_reads_edge_ids(store):
+    s, ref, idx = store
+    _check_batch(s, ref, idx,
+                 np.array([0, 0, idx.n_reads - 1, 1, idx.n_reads - 1]))
+
+
+def test_fetch_reads_empty_batch(store):
+    s, _, _ = store
+    out, lens = s.fetch_reads(np.array([], np.int64))
+    assert out.shape[0] == 0 and lens.shape[0] == 0
+
+
+def test_fetch_reads_rejects_out_of_range_ids(store):
+    """Both pipeline variants fail loudly on bad ids (the device gather
+    would otherwise clamp/wrap silently)."""
+    s, _, idx = store
+    for bad in ([idx.n_reads], [-1], [0, idx.n_reads + 7]):
+        with pytest.raises(IndexError, match="out of range"):
+            s.fetch_reads(np.array(bad))
+    with pytest.raises(IndexError, match="out of range"):
+        s.fetch_records(np.array([10**7]), 128)
+    # records wholly past raw_size are rejected, not zero-padded garbage
+    with pytest.raises(IndexError, match="out of range"):
+        s.fetch_records(np.array([s.decoder.da.raw_size // 128 + 1]), 128)
+    # the batch endpoint rejects bad ids at submit, keeping queued
+    # tickets flushable
+    b = ReadBatcher(s)
+    b.submit(0)
+    with pytest.raises(IndexError, match="out of range"):
+        b.submit(idx.n_reads)
+    assert b.pending() == 1 and len(b.flush()) == 1
+
+
+def test_fetch_reads_mode1_matches_mode2(store):
+    """Mode 1 (host entropy) and Mode 2 (device) agree byte-for-byte."""
+    s, ref, idx = store
+    ids = np.arange(0, idx.n_reads, 17)
+    out2, lens2 = s.fetch_reads(ids)
+    out1, lens1 = s.fetch_reads(ids, mode2=False)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(lens1), np.asarray(lens2))
+
+
+def test_fetch_reads_lru_cache_bit_perfect_and_hot(fastq_platinum):
+    """Cached path == uncached path; the second identical batch is all
+    hits; capacity smaller than the working set still decodes correctly."""
+    a = enc.encode(fastq_platinum, block_size=4096)
+    idx = ReadIndex.build(fastq_platinum, 4096)
+    ref = np.frombuffer(fastq_platinum, np.uint8)
+    plain = CompressedResidentStore(a, idx, backend="ref")
+    rng = np.random.default_rng(5)
+    ids = rng.integers(0, idx.n_reads, size=64)
+    want = np.asarray(plain.fetch_reads(ids)[0])
+
+    for cap in (4, a.n_blocks):                # smaller + larger than WS
+        cached = CompressedResidentStore(a, idx, backend="ref",
+                                         cache_blocks=cap)
+        np.testing.assert_array_equal(np.asarray(cached.fetch_reads(ids)[0]),
+                                      want)
+        np.testing.assert_array_equal(np.asarray(cached.fetch_reads(ids)[0]),
+                                      want)
+        info = cached.cache_info()
+        assert info["resident"] <= cap
+        if cap >= a.n_blocks:
+            assert info["hits"] > 0 and info["misses"] <= a.n_blocks
+
+
+def test_fetch_records_spanning_blocks_and_partial_final_block(
+        fastq_platinum):
+    """Records straddling block boundaries + the final partial block
+    (raw_size % block_size != 0), in both Mode 1 and Mode 2."""
+    data = fastq_platinum[:50_000]             # 50000 % 4096 != 0
+    a = enc.encode(data, block_size=4096)
+    assert a.raw_size % a.block_size != 0
+    ref = np.frombuffer(data, np.uint8)
+    s = CompressedResidentStore(a, backend="ref")
+    rec = 1000                                  # not a divisor of 4096
+    last = len(data) // rec - 1                 # tail record → final block
+    ids = np.array([0, 3, 4, last - 1, last])
+    assert any((r * rec) // 4096 != (r * rec + rec - 1) // 4096 for r in ids)
+    for mode2 in (True, False):
+        rows = np.asarray(s.fetch_records(ids, rec, mode2=mode2))
+        for i, r in enumerate(ids):
+            np.testing.assert_array_equal(rows[i], ref[r * rec:(r + 1) * rec])
+
+
+def test_decode_range_block_boundaries_partial_final(fastq_platinum):
+    """decode_range across boundaries and into the partial final block,
+    Mode 1 and Mode 2."""
+    data = fastq_platinum[:50_000]
+    a = enc.encode(data, block_size=4096)
+    ref = np.frombuffer(data, np.uint8)
+    from repro.core.decoder import Decoder
+    d = Decoder(a, backend="ref")
+    n = len(data)
+    spans = [(4090, 4100),                      # block 0 → 1
+             (8192, 12288),                     # exact block
+             (4096 * 12 - 1, n),                # through the partial tail
+             (n - 10, n), (0, n)]
+    for mode2 in (True, False):
+        for lo, hi in spans:
+            np.testing.assert_array_equal(d.decode_range(lo, hi, mode2=mode2),
+                                          ref[lo:hi])
+
+
+def test_read_batcher_coalesces(store):
+    s, ref, idx = store
+    b = ReadBatcher(s, max_batch=512)
+    rng = np.random.default_rng(11)
+    ids = rng.integers(0, idx.n_reads, size=300)
+    tickets = [b.submit(r) for r in ids]
+    assert b.pending() == 300
+    got = b.flush()
+    assert b.pending() == 0 and b.flushes == 1 and b.served == 300
+    for t, r in zip(tickets, ids):
+        lo, hi, _ = idx.lookup(int(r))
+        np.testing.assert_array_equal(got[t], ref[lo:hi])
+
+
+def test_fetch_reads_matches_legacy_fetch_records_path(fastq_platinum):
+    """The unified pipeline serves the training input path unchanged:
+    fixed-record ids through fetch_records == slices of the raw corpus,
+    and fetch_reads over a fixed_records index agrees."""
+    rec = 129
+    n_rec = len(fastq_platinum) // rec
+    data = fastq_platinum[:n_rec * rec]
+    a = enc.encode(data, block_size=4096)
+    idx = ReadIndex.fixed_records(n_rec, rec, 4096)
+    s = CompressedResidentStore(a, idx, backend="ref")
+    ref = np.frombuffer(data, np.uint8)
+    ids = np.array([0, 7, 31, n_rec - 1])
+    rows = np.asarray(s.fetch_records(ids, rec))
+    reads, lens = s.fetch_reads(ids)
+    np.testing.assert_array_equal(rows, np.asarray(reads))
+    assert set(np.asarray(lens).tolist()) == {rec}
+    for i, r in enumerate(ids):
+        np.testing.assert_array_equal(rows[i], ref[r * rec:(r + 1) * rec])

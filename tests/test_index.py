@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import encoder as enc
-from repro.core.index import FaiIndex, ReadIndex, parse_fastq_records
+from repro.core.index import (FaiIndex, ReadIndex, parse_fastq_records,
+                              split_starts)
 from repro.core.residency import CompressedResidentStore
 
 
@@ -20,6 +21,54 @@ def test_parse_fastq(fastq_platinum):
     assert names[0] == b"SRR0.0"    # name excludes '@' and the comment
     assert starts[0] == 0 and int(starts[-1]) == len(fastq_platinum)
     assert len(names) == len(starts) - 1
+
+
+def test_parse_fastq_no_trailing_newline(fastq_platinum):
+    """EOF counts as the final line terminator (real-world FASTQ often
+    lacks the trailing newline)."""
+    clipped = fastq_platinum.rstrip(b"\n")
+    assert not clipped.endswith(b"\n")
+    starts, names = parse_fastq_records(clipped)
+    full_starts, full_names = parse_fastq_records(fastq_platinum)
+    assert names == full_names
+    np.testing.assert_array_equal(starts[:-1], full_starts[:-1])
+    assert int(starts[-1]) == len(clipped)
+
+
+def test_parse_fastq_empty_input():
+    starts, names = parse_fastq_records(b"")
+    assert names == [] and starts.tolist() == [0]
+    idx = ReadIndex.build(b"", 4096)
+    assert idx.n_reads == 0 and idx.nbytes == 0
+
+
+def test_parse_fastq_truncated_is_helpful():
+    with pytest.raises(ValueError, match="multiple of 4"):
+        parse_fastq_records(b"@r1\nACGT\n+\n")          # missing quality
+
+
+def test_split_starts_beyond_int31():
+    """Regression: device start tables must not truncate u64 offsets —
+    archives ≥ 2 GiB previously went through an int32 cast."""
+    bs = 4096
+    starts = np.array([0, 2**31 + 5000, 2**32 + 123, 2**33 + bs + 7],
+                      np.uint64)
+    blk, rem = split_starts(starts, bs)
+    assert blk.dtype == np.int32 and rem.dtype == np.int32
+    np.testing.assert_array_equal(
+        blk.astype(np.int64) * bs + rem.astype(np.int64),
+        starts.astype(np.int64))
+
+
+def test_device_start_table_beyond_int31(fastq_platinum):
+    """The store's device-resident table round-trips > 2^31 offsets."""
+    a = enc.encode(fastq_platinum[:20_000], block_size=4096)
+    big = ReadIndex(starts=np.array([0, 2**31 + 4097, 2**32 + 9000],
+                                    np.uint64), block_size=4096)
+    s = CompressedResidentStore(a, big, backend="ref")
+    rebuilt = (np.asarray(s._starts_blk, np.int64) * 4096
+               + np.asarray(s._starts_rem, np.int64))
+    np.testing.assert_array_equal(rebuilt, big.starts.astype(np.int64))
 
 
 def test_read_index_is_8_bytes_per_read(fastq_platinum):

@@ -2,7 +2,10 @@
 (assignment deliverable c: per-kernel allclose against ref.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # offline container - seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 import jax.numpy as jnp
 

@@ -1,7 +1,10 @@
 """Position-invariant random access (paper §4) + range decode (§5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # offline container - seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import decoder as dec
 from repro.core import encoder as enc

@@ -33,8 +33,8 @@ def test_sharded_decode_bit_perfect():
         ref = np.frombuffer(data, np.uint8)
         a = encoder.encode(data, block_size=4096)
         dec = Decoder(a, backend="ref")
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         replicate_archive(dec, mesh)
         out = sharded_decode_blocks(dec, np.arange(a.n_blocks), mesh)
         flat = np.asarray(out).reshape(-1)[:len(ref)]
@@ -88,8 +88,8 @@ def test_elastic_reshard_across_mesh_shapes():
                              .reshape(64, 16)}}
             ck.save(1, st)
             # restore onto a DIFFERENT mesh (8-way instead of host-local)
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.compat import make_mesh
+            mesh = make_mesh((8,), ("data",))
             sh = {"params.w": NamedSharding(mesh, P("data", None))}
             out = elastic_reshard(ck, sh)
             w = out["params"]["w"]
@@ -109,15 +109,15 @@ def test_dryrun_machinery_small_mesh():
         from repro.configs import get_config
         from repro.launch.dryrun import build_cell
         from repro.roofline import hlo_costs as rl
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import cost_analysis, make_mesh, mesh_context
+        mesh = make_mesh((4, 2), ("data", "model"))
         cfg = dc.replace(get_config("qwen2-1.5b").reduced(), n_layers=2)
         fn, args, in_sh, out_sh, donate, meta = build_cell(
             cfg, "train_4k", mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                                donate_argnums=donate).lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis(compiled)
         coll = rl.collective_bytes(compiled.as_text())
         assert cost["flops"] > 0
         assert sum(coll.values()) > 0       # grads must sync somewhere
