@@ -1,0 +1,65 @@
+"""Unified query plane: plan-lowering overhead + region-query latency.
+
+Two questions the api_redesign must answer:
+
+  1. What does lowering a batch of addresses to a DecodePlan cost, next to
+     the decode it drives? (host-side planner overhead, should be noise)
+  2. What does a named `samtools faidx`-style region query cost next to
+     the equivalent `fetch_reads` id batch? (the device name-table hop is
+     one extra searchsorted — position-invariant access should price both
+     the same)
+"""
+import numpy as np
+
+from benchmarks.common import corpora, row, time_fn
+from repro.api import ByteRange, GenomicArchive, Region
+from repro.api.executors import StreamingExecutor
+
+B = 256
+
+
+def main(small: bool = False):
+    buf = corpora(2000 if small else 8000)["fastq_platinum"]
+    ga = GenomicArchive.from_bytes(buf, block_size=16384, backend="ref")
+    ref = np.frombuffer(buf, np.uint8)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, ga.n_reads, size=B)
+    names = [b"SRR0.%d" % i for i in ids]
+    regions = [Region(n) for n in names]
+
+    # 1. plan lowering alone (host) vs the full query it drives
+    t_plan = time_fn(lambda: ga.planner.plan_read_ids(ids), iters=5)
+    t_plan_named = time_fn(lambda: ga.planner.plan(regions), iters=5)
+    t_query = time_fn(lambda: ga.query(ids)[0], iters=3)
+    row(f"query/plan_ids_B{B}", t_plan,
+        f"overhead={t_plan/t_query:.1%}_of_query")
+    row(f"query/plan_named_B{B}", t_plan_named,
+        f"overhead={t_plan_named/t_query:.1%}_of_query")
+
+    # 2. named regions vs raw id batch (same covering-block decode)
+    t_region = time_fn(lambda: ga.query(regions)[0], iters=3)
+    t_fetch = time_fn(lambda: ga.store.fetch_reads(ids)[0], iters=3)
+    out_r, lens_r = ga.query(regions)
+    out_f, _ = ga.store.fetch_reads(ids)
+    assert np.array_equal(np.asarray(out_r), np.asarray(out_f))
+    row(f"query/region_B{B}", t_region,
+        f"{B/t_region:.0f}reads/s(cpu);vs_fetch_reads={t_region/t_fetch:.2f}x")
+    row(f"query/fetch_reads_B{B}", t_fetch, f"{B/t_fetch:.0f}reads/s(cpu)")
+
+    # 3. budgeted streaming over the whole archive
+    budget = 16 * ga.block_size
+
+    def run_stream():
+        ex = StreamingExecutor(ga.store, max_resident_bytes=budget,
+                               planner=ga.planner)
+        n = sum(c.size for c in ex.chunks([ByteRange(0, ga.raw_size)]))
+        assert n == ga.raw_size
+        return np.zeros(1)
+
+    t_stream = time_fn(run_stream, iters=1)
+    row("query/stream_full_archive", t_stream,
+        f"{ga.raw_size/t_stream/1e6:.1f}MB/s(cpu);budget={budget}B")
+
+
+if __name__ == "__main__":
+    main()

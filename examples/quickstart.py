@@ -1,13 +1,15 @@
-"""Quickstart: compress a FASTQ, hold it device-resident, random-access it.
+"""Quickstart: one query plane over a compressed, device-resident FASTQ.
+
+Encode once, hold the archive compressed in device memory, then address it
+any way you like — read ids, absolute byte ranges, or `samtools`-style
+named regions — through the `GenomicArchive` facade. Queries bigger than a
+memory budget stream.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import encoder
-from repro.core.decoder import Decoder
-from repro.core.index import FaiIndex, ReadIndex
-from repro.core.residency import CompressedResidentStore
+from repro.api import ByteRange, GenomicArchive, ReadId
 from repro.data.fastq import make_fastq
 
 
@@ -16,41 +18,45 @@ def main():
     fastq = make_fastq("platinum", n_reads=3000, seed=0)
     print(f"FASTQ: {len(fastq):,} bytes")
 
-    # 2. encode once (absolute-offset LZ77, self-contained 16 KB blocks)
-    archive = encoder.encode(fastq, block_size=16 * 1024)
-    print(f"archive: {archive.compressed_bytes:,} bytes "
-          f"({archive.ratio:.2f}x), {archive.n_blocks} blocks")
+    # 2. encode + index + name table, all in one facade
+    ga = GenomicArchive.from_bytes(fastq, block_size=16 * 1024)
+    print(ga)
 
-    # 3. device-resident decode — whole file, bit-perfect
-    dec = Decoder(archive)
-    out = dec.decode_all()
-    assert np.array_equal(out, np.frombuffer(fastq, np.uint8))
+    # 3. query by READ ID: one batch → one covering-block selection decode
+    rows, lens = ga.query([ReadId(7), ReadId(1234), ReadId(2999)])
+    print(f"3 reads in one decode: lengths {np.asarray(lens).tolist()}")
+
+    # 4. query by NAME — `samtools faidx` semantics, resolved through the
+    #    device-resident name table (1-based inclusive coordinates)
+    read = bytes(ga["SRR0.1234"])
+    sub = bytes(ga["SRR0.1234:1-40"])
+    assert read.startswith(sub)
+    print(f"read SRR0.1234: {read.splitlines()[0].decode()} "
+          f"(name table: {ga.names.device_bytes:,}B on device)")
+
+    # 5. query by BYTE RANGE — position-invariant: only covering blocks
+    #    decode, wherever the range lands
+    lo = 17 * ga.block_size + 100
+    ref = np.frombuffer(fastq, np.uint8)
+    assert np.array_equal(ga[lo:lo + 256], ref[lo:lo + 256])
+    print(f"byte slice [{lo}:{lo + 256}): bit-perfect, touched "
+          f"~1/{ga.stats().n_blocks} blocks")
+
+    # 6. STREAM anything bigger than a memory budget (paper §5 v7-RA):
+    #    whole-archive decode under 128 KB of decoded residency
+    budget = 128 * 1024
+    total = 0
+    for i, chunk in enumerate(ga.stream([ByteRange(0, ga.raw_size)],
+                                        max_resident_bytes=budget)):
+        total += chunk.size
+    assert total == ga.raw_size
+    print(f"streamed {total:,} bytes in {i + 1} chunks, never holding "
+          f"more than {budget:,}B decoded")
+
+    # 7. whole-file check, bit-perfect
+    out = ga.store.decoder.decode_all()
+    assert np.array_equal(out, ref)
     print("whole-file decode: bit-perfect")
-
-    # 4. position-invariant random access: decode ONE block
-    row = np.asarray(dec.decode_blocks(np.array([17])))[0]
-    start = 17 * archive.block_size
-    assert np.array_equal(row[:100], np.frombuffer(fastq, np.uint8)
-                          [start:start + 100])
-    print("1-block seek: bit-perfect, touched 1/%d blocks"
-          % archive.n_blocks)
-
-    # 5. read-level access through the 8 B/read index
-    idx = ReadIndex.build(fastq, archive.block_size)
-    fai = FaiIndex.build(fastq)
-    store = CompressedResidentStore(archive, idx)
-    read = bytes(np.asarray(store.fetch_read(1234)))
-    print(f"read 1234: {read.splitlines()[0].decode()} "
-          f"(index {idx.nbytes:,}B vs .fai {fai.nbytes:,}B -> "
-          f"{fai.nbytes / idx.nbytes:.1f}x smaller)")
-
-    # 6. range decode under a memory budget (paper §5)
-    chunks = [np.asarray(dec.decode_blocks(np.arange(b, min(b + 8,
-                                                            archive.n_blocks))))
-              for b in range(0, archive.n_blocks, 8)]
-    total = sum(c.size for c in chunks)
-    print(f"chunked range decode: {len(chunks)} chunks, {total:,} bytes, "
-          "never held the whole output at once")
 
 
 if __name__ == "__main__":

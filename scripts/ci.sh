@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # One-command tier-1 reproduction (ROADMAP.md "Tier-1 verify").
 #
-#   scripts/ci.sh            # full suite
+#   scripts/ci.sh            # compileall + full suite + benchmark smoke
 #   scripts/ci.sh -k codec   # any extra pytest args pass through
 #
 # Works fully offline: when `hypothesis` is absent the property tests run
@@ -9,4 +9,6 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m compileall -q src
+python -m pytest -x -q "$@"
+python -m benchmarks.run --small --only index,fetch_batch,query

@@ -1,0 +1,24 @@
+"""The unified query plane: address spaces → DecodePlan → executors.
+
+One addressable surface over every decode path (paper §4,
+position-invariant random access): typed addresses (`ReadId`,
+`ByteRange`, `Region`/`parse_region`), a `QueryPlanner` that lowers any
+batch to a single `DecodePlan`, executors (`DeviceExecutor`,
+`StreamingExecutor`, `ShardedExecutor`), and the `GenomicArchive`
+facade. Legacy entry points in `repro.core.residency`,
+`repro.core.decoder`, `repro.serving`, and `repro.data` are
+compatibility shims over this layer.
+"""
+from repro.api.address import (Address, ByteRange, NameTable, ReadId, Region,
+                               normalize, parse_region)
+from repro.api.archive import GenomicArchive
+from repro.api.executors import (ChunkStats, DeviceExecutor, ShardedExecutor,
+                                 StreamingExecutor)
+from repro.api.plan import DecodePlan, QueryPlanner, covering_blocks
+
+__all__ = [
+    "Address", "ByteRange", "ChunkStats", "DecodePlan",
+    "DeviceExecutor", "GenomicArchive", "NameTable", "QueryPlanner",
+    "ReadId", "Region", "ShardedExecutor", "StreamingExecutor",
+    "covering_blocks", "normalize", "parse_region",
+]

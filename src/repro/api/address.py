@@ -1,0 +1,209 @@
+"""Typed address spaces for the unified query plane (paper §4).
+
+Every decode request is an *address* in one of three spaces:
+
+  ReadId(i)              — the i-th record of the indexed corpus
+  ByteRange(lo, hi)      — absolute decompressed output bytes [lo, hi)
+  Region(name, s, e)     — a `samtools faidx`-style named region: bytes
+                           [s, e) *within* the record called `name`
+
+`parse_region` accepts the familiar text forms (`"SRR0.7"`,
+`"SRR0.7:100"`, `"SRR0.7:100-200"`, 1-based inclusive like samtools) and
+lowers them to the 0-based half-open `Region` used internally. NOTE the
+coordinate space: region offsets index the record's RAW BYTES (header
+line + sequence + separator + quality), not sequence bases — this store
+addresses byte payloads; `samtools faidx` is the comparison for the
+name→location index, not for base-coordinate arithmetic. When resolving
+a string address against a name table, the FULL string is tried as a
+record name first (samtools precedence), so Illumina-style names ending
+in numeric `:x:y` fields are not mis-split.
+
+`NameTable` is the device-resident name→read-id table that finally wires
+`FaiIndex` semantics into the GPU pipeline: names are FNV-1a-64 hashed on
+host, the (hash, read id) table lives in device memory sorted by hash, and
+a batch of name lookups resolves with one jitted searchsorted + bounded
+probe — so a named query takes the same device start-table path
+`fetch_reads` uses, never a host-side dict walk over the archive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- address types
+@dataclasses.dataclass(frozen=True)
+class ReadId:
+    """The i-th record of the corpus (requires a ReadIndex)."""
+    i: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteRange:
+    """Absolute decompressed output bytes [lo, hi)."""
+    lo: int
+    hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """Bytes [start, end) within the record called `name` (0-based
+    half-open; None = record boundary). Requires a NameTable."""
+    name: bytes
+    start: Optional[int] = None
+    end: Optional[int] = None
+
+
+Address = Union[ReadId, ByteRange, Region, int, slice, str, bytes]
+
+_REGION_SUFFIX = re.compile(rb"^(\d+)(?:-(\d*))?$")
+
+
+def parse_region(text: Union[str, bytes]) -> Region:
+    """`"name"` / `"name:100"` / `"name:100-"` / `"name:100-200"` → Region.
+
+    Coordinates follow `samtools faidx`: 1-based, inclusive, with the
+    open-ended `100-` form meaning "to the end of the record". Only a
+    trailing `:<digits>[-<digits>]` is treated as a coordinate suffix, so
+    Illumina-style names containing colons still parse as plain names.
+    """
+    raw = text.encode() if isinstance(text, str) else bytes(text)
+    name, sep, tail = raw.rpartition(b":")
+    if sep:
+        m = _REGION_SUFFIX.match(tail)
+        if m:
+            start1 = int(m.group(1))
+            if start1 < 1:
+                raise ValueError(f"region start is 1-based: {text!r}")
+            end1 = int(m.group(2)) if m.group(2) else None
+            if end1 is not None and end1 < start1:
+                raise ValueError(f"empty/inverted region: {text!r}")
+            return Region(name=name, start=start1 - 1, end=end1)
+    return Region(name=raw)
+
+
+# --------------------------------------------------------- name → id lookup
+def _fnv1a64(name: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in name:
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def _name_lookup_core(key_hi, key_lo, ids, q_hi, q_lo, probe: int):
+    """Sorted-hash lookup on device: searchsorted on the high word, then a
+    bounded probe over the (static-length) run of equal high words. Missing
+    names resolve to -1."""
+    n = key_hi.shape[0]
+    pos = jnp.searchsorted(key_hi, q_hi).astype(jnp.int32)
+    cand = pos[:, None] + jnp.arange(probe, dtype=jnp.int32)[None, :]
+    cand = jnp.minimum(cand, n - 1)
+    hit = ((key_hi[cand] == q_hi[:, None]) & (key_lo[cand] == q_lo[:, None]))
+    first = jnp.argmax(hit, axis=1)
+    rid = ids[jnp.take_along_axis(cand, first[:, None], axis=1)[:, 0]]
+    return jnp.where(hit.any(axis=1), rid, -1)
+
+
+_name_lookup_jit = partial(jax.jit, static_argnames=("probe",))(
+    _name_lookup_core)
+
+
+class NameTable:
+    """Device-resident name→read-id table (the `.fai` name column, on GPU).
+
+    Build once from the corpus names; `lookup` resolves a batch of names to
+    read ids in one jitted call. 64-bit hash collisions are detected at
+    build time (birthday bound ~2^32 names — far past any archive here).
+    """
+
+    def __init__(self, key_hi: jnp.ndarray, key_lo: jnp.ndarray,
+                 ids: jnp.ndarray, probe: int, n_names: int):
+        self.key_hi = key_hi          # u32[n] sorted (hi, lo) lexicographic
+        self.key_lo = key_lo          # u32[n]
+        self.ids = ids                # i32[n] read id per sorted slot
+        self.probe = probe            # static max run of equal high words
+        self.n_names = n_names
+
+    @property
+    def device_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in (self.key_hi, self.key_lo, self.ids))
+
+    @classmethod
+    def build(cls, names: Sequence[bytes]) -> "NameTable":
+        n = len(names)
+        h = np.fromiter((_fnv1a64(bytes(nm)) for nm in names),
+                        np.uint64, count=n)
+        hi = (h >> np.uint64(32)).astype(np.uint32)
+        lo = (h & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        order = np.lexsort((lo, hi))
+        hs = h[order]
+        dup = np.flatnonzero(hs[1:] == hs[:-1]) if n > 1 else np.array([], int)
+        if dup.size:
+            a, b = int(order[dup[0]]), int(order[dup[0] + 1])
+            if names[a] != names[b]:
+                raise ValueError(
+                    f"64-bit name-hash collision: {names[a]!r} vs "
+                    f"{names[b]!r}; rename one record")
+            raise ValueError(f"duplicate record name {names[a]!r} "
+                             f"(ids {a} and {b}); names must be unique")
+        if n:
+            hi_s = hi[order]
+            runs = np.diff(np.flatnonzero(
+                np.concatenate([[True], hi_s[1:] != hi_s[:-1], [True]])))
+            probe = int(runs.max(initial=1))
+        else:
+            probe = 1
+        return cls(key_hi=jnp.asarray(hi[order]),
+                   key_lo=jnp.asarray(lo[order]),
+                   ids=jnp.asarray(order.astype(np.int32)),
+                   probe=probe, n_names=n)
+
+    def lookup(self, names: Sequence[bytes],
+               missing_ok: bool = False) -> np.ndarray:
+        """names → i32 read ids (device lookup). KeyError on any miss
+        unless `missing_ok`, in which case misses resolve to -1."""
+        q = [bytes(nm) for nm in names]
+        if not q:
+            return np.zeros(0, np.int32)
+        if self.n_names == 0:
+            if missing_ok:
+                return np.full(len(q), -1, np.int32)
+            raise KeyError(f"name table is empty; no record named {q[0]!r}")
+        h = np.fromiter((_fnv1a64(nm) for nm in q), np.uint64, count=len(q))
+        rid = np.asarray(_name_lookup_jit(
+            self.key_hi, self.key_lo, self.ids,
+            jnp.asarray((h >> np.uint64(32)).astype(np.uint32)),
+            jnp.asarray((h & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+            probe=self.probe))
+        missing = np.flatnonzero(rid < 0)
+        if missing.size and not missing_ok:
+            raise KeyError(
+                f"no record named {q[int(missing[0])]!r} "
+                f"({missing.size} of {len(q)} names unresolved)")
+        return rid
+
+
+def normalize(addr: Address) -> Union[ReadId, ByteRange, Region]:
+    """Python-native forms → typed addresses (ints are read ids, slices are
+    byte ranges, strings parse as regions)."""
+    if isinstance(addr, (ReadId, ByteRange, Region)):
+        return addr
+    if isinstance(addr, (int, np.integer)):
+        return ReadId(int(addr))
+    if isinstance(addr, slice):
+        if addr.step not in (None, 1):
+            raise ValueError("strided byte slices are not addressable")
+        if addr.start is None or addr.stop is None:
+            raise ValueError("byte-range slices need explicit start and stop")
+        return ByteRange(int(addr.start), int(addr.stop))
+    if isinstance(addr, (str, bytes)):
+        return parse_region(addr)
+    raise TypeError(f"not an address: {addr!r}")

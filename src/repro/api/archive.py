@@ -1,0 +1,140 @@
+"""`GenomicArchive` — the one facade over the query plane.
+
+    ga = GenomicArchive.from_bytes(fastq_bytes)        # encode + index
+    rows, lens = ga.query([ReadId(7), "SRR0.9:10-60"]) # one DecodePlan
+    for chunk in ga.stream([ByteRange(0, ga.raw_size)],
+                           max_resident_bytes=1 << 20):
+        ...                                            # budgeted decode
+    ga[1000:2000]     # absolute byte slice       ga[7]      # read bytes
+    ga["SRR0.9:10-60"]                            # named region bytes
+
+Every address — read id, byte offset, or `samtools faidx`-style named
+region — resolves through the same compact index to the same
+covering-block decode (the paper's position-invariant random access),
+and every legacy entry point (`fetch_reads`, `decode_range`,
+`ReadBatcher`, the data loader, `serve_reads`) is a shim over this layer.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.api.address import Address, NameTable
+from repro.api.executors import DeviceExecutor, StreamingExecutor
+from repro.api.plan import DecodePlan, QueryPlanner
+
+
+class GenomicArchive:
+    """Compressed-resident archive + index + name table behind one query
+    surface. Wraps an existing `CompressedResidentStore` (use `from_bytes`
+    / `from_records` to build everything from raw bytes)."""
+
+    def __init__(self, store, names: Optional[Sequence[bytes]] = None,
+                 name_table: Optional[NameTable] = None):
+        self.store = store
+        if name_table is None and names is not None:
+            name_table = NameTable.build(names)
+        self.names = name_table
+        self.planner = QueryPlanner(store, name_table)
+        self.executor = DeviceExecutor(store)
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_bytes(cls, data: bytes, block_size: int = 16 * 1024,
+                   mode: str = "ra", entropy: str = "rans",
+                   backend: str = "auto", cache_blocks: int = 0
+                   ) -> "GenomicArchive":
+        """FASTQ bytes → encoded archive + ReadIndex + device name table."""
+        from repro.core.encoder import encode
+        from repro.core.index import ReadIndex, parse_fastq_records
+        from repro.core.residency import CompressedResidentStore
+        starts, names = parse_fastq_records(data)
+        archive = encode(data, block_size=block_size, mode=mode,
+                         entropy=entropy)
+        index = ReadIndex(starts=starts, block_size=block_size)
+        store = CompressedResidentStore(archive, index, backend=backend,
+                                        cache_blocks=cache_blocks)
+        return cls(store, names=names)
+
+    @classmethod
+    def from_records(cls, data: bytes, record_bytes: int,
+                     block_size: int = 16 * 1024, mode: str = "ra",
+                     entropy: str = "rans", backend: str = "auto",
+                     cache_blocks: int = 0) -> "GenomicArchive":
+        """Fixed-size records (tokenized corpora): arithmetic index, no
+        names. `data` is truncated to a whole number of records."""
+        from repro.core.encoder import encode
+        from repro.core.index import ReadIndex
+        from repro.core.residency import CompressedResidentStore
+        n_rec = len(data) // record_bytes
+        if n_rec == 0:
+            raise ValueError("corpus smaller than one record")
+        data = data[:n_rec * record_bytes]
+        archive = encode(data, block_size=block_size, mode=mode,
+                         entropy=entropy)
+        index = ReadIndex.fixed_records(n_rec, record_bytes, block_size)
+        store = CompressedResidentStore(archive, index, backend=backend,
+                                        cache_blocks=cache_blocks)
+        return cls(store)
+
+    # ------------------------------------------------------------- queries
+    def plan(self, addrs: Sequence[Address]) -> DecodePlan:
+        return self.planner.plan(addrs)
+
+    def query(self, addrs: Sequence[Address], mode2: bool = True
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Any batch of addresses → ((B, max_len) u8 zero-padded payloads,
+        (B,) i32 lengths), one DecodePlan, one device execution."""
+        if not isinstance(addrs, np.ndarray) and len(addrs) == 0:
+            return (jnp.zeros((0, 1), jnp.uint8), jnp.zeros((0,), jnp.int32))
+        return self.executor.run(self.planner.plan(addrs), mode2=mode2)
+
+    def query_bytes(self, addr: Address, mode2: bool = True) -> np.ndarray:
+        """Single address → exact payload bytes (host u8 array)."""
+        rows, lens = self.query([addr], mode2=mode2)
+        return np.asarray(rows[0])[:int(lens[0])]
+
+    def stream(self, addrs: Sequence[Address], max_resident_bytes: int,
+               mode2: bool = True) -> Iterator[np.ndarray]:
+        """Budgeted decode of queries of ANY size: yields u8 chunks whose
+        concatenation is the concatenated payloads, never materializing
+        more than `max_resident_bytes` of decoded rows + gather output."""
+        ex = StreamingExecutor(self.store,
+                               max_resident_bytes=max_resident_bytes,
+                               mode2=mode2, planner=self.planner)
+        return ex.chunks(addrs)
+
+    def __getitem__(self, key: Union[Address, slice]) -> np.ndarray:
+        """`ga[lo:hi]` absolute bytes; `ga[i]` read i; `ga["name:s-e"]`
+        named region (strings resolve full-name-first, like samtools)."""
+        return self.query_bytes(key)
+
+    def __len__(self) -> int:
+        return self.n_reads
+
+    # --------------------------------------------------------------- sugar
+    @property
+    def raw_size(self) -> int:
+        return self.store.decoder.da.raw_size
+
+    @property
+    def n_reads(self) -> int:
+        return self.store.index.n_reads if self.store.index else 0
+
+    @property
+    def block_size(self) -> int:
+        return self.store.block_size
+
+    def stats(self):
+        return self.store.stats()
+
+    def __repr__(self) -> str:
+        st = self.stats()
+        named = self.names.n_names if self.names else 0
+        return (f"GenomicArchive({st.raw_size:,}B raw → "
+                f"{st.compressed_device_bytes:,}B device-resident, "
+                f"{st.n_blocks} blocks, {self.n_reads} reads, "
+                f"{named} named)")

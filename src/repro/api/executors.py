@@ -1,0 +1,250 @@
+"""Plan executors: the three ways a DecodePlan becomes bytes.
+
+DeviceExecutor     — one jitted pipeline (`_fetch_dev_core` underneath):
+                     entropy decode → match resolve → ragged gather, fully
+                     on device. Whole-record plans additionally resolve
+                     their covering set from the device start table
+                     (`_fetch_reads_core`), and the decoded-block LRU /
+                     Mode-1 paths fall back to the staged variant (host
+                     covering set from the plan, decode through the
+                     store's cache, same jitted gather).
+StreamingExecutor  — a VRAM-budgeted chunked iterator over a plan: the
+                     paper's §5 range-decode contribution generalized so
+                     ANY query larger than `max_resident_bytes` streams
+                     instead of OOMing.
+ShardedExecutor    — the plan's unique-block selection fanned out over a
+                     device mesh (`sharded_decode_blocks`), gather on the
+                     assembled rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.api.address import Address
+from repro.api.plan import DecodePlan, QueryPlanner
+from repro.core.residency import (_fetch_dev_jit, _fetch_reads_jit,
+                                  _gather_jit, _pad_pow2)
+
+
+class _DecoderStore:
+    """Minimal store adapter so a bare `Decoder` rides the query plane
+    (no index, no cache) without duplicating its device archive."""
+
+    index = None
+    _starts64 = None
+    _cache_cap = 0
+    _max_len = _max_span = 1
+
+    def __init__(self, decoder):
+        self.decoder = decoder
+        self.block_size = decoder.da.block_size
+
+    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
+        decode = (self.decoder.decode_blocks if mode2
+                  else self.decoder.decode_blocks_host_entropy)
+        return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
+
+
+class DeviceExecutor:
+    """Execute a DecodePlan on the store's device pipeline.
+
+    Returns ((n_queries, max_len) u8 zero-padded rows, (n_queries,) i32
+    lengths) — padding rows are cropped, padding columns are zero.
+    """
+
+    def __init__(self, store):
+        self.store = store
+
+    def run(self, plan: DecodePlan, mode2: bool = True
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        store = self.store
+        B = plan.n_queries
+        if B == 0:
+            return (jnp.zeros((0, plan.max_len), jnp.uint8),
+                    jnp.zeros((0,), jnp.int32))
+        dec = store.decoder
+        jitted = mode2 and store._cache_cap == 0
+        if jitted and plan.device_ids is not None:
+            out, lens = _fetch_reads_jit(
+                dec.arrays, store._starts_blk, store._starts_rem,
+                jnp.asarray(plan.device_ids, jnp.int32),
+                da_meta=dec._meta(plan.batch), backend=dec.backend,
+                geom=plan.geom())
+            return out[:B], lens[:B]
+        lens = jnp.asarray(plan.lengths[:B].astype(np.int32))
+        if jitted:
+            b0, r0, end_blk = plan.host_spans()
+            out = _fetch_dev_jit(
+                dec.arrays, jnp.asarray(b0.astype(np.int32)),
+                jnp.asarray(r0),
+                jnp.asarray(plan.lengths.astype(np.int32)),
+                jnp.asarray(end_blk.astype(np.int32)),
+                da_meta=dec._meta(plan.batch), backend=dec.backend,
+                geom=plan.geom())
+            return out[:B], lens
+        # staged: decode through the LRU / Mode-1 host entropy stage, then
+        # the same jitted ragged gather. Bytes stay on device throughout.
+        _, r0, _, uniq, row_map = plan.host_cover()
+        rows = store._rows_for_blocks(uniq, mode2)
+        out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
+                          jnp.asarray(plan.lengths.astype(np.int32)),
+                          block_size=plan.block_size, max_len=plan.max_len)
+        return out[:B], lens
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    """Per-chunk residency accounting (asserted against the budget in
+    tests: decoded rows + padded gather output are what the chunk
+    materializes beyond the compressed archive itself)."""
+    n_spans: int
+    n_blocks: int
+    decoded_bytes: int        # unique covering rows: U * block_size
+    gather_bytes: int         # padded gather output: B * max_len
+    yielded_bytes: int
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.decoded_bytes + self.gather_bytes
+
+
+class StreamingExecutor:
+    """Decode arbitrarily large queries under a byte budget.
+
+    Spans are split at block boundaries into pieces covering at most K
+    blocks (K sized so decoded rows + gather output of a chunk fit
+    `max_resident_bytes`), then greedily packed into chunks; each chunk is
+    one planner lowering + one device execution, yielded as exact payload
+    bytes. Concatenating every yielded chunk reproduces the concatenated
+    payloads of the addressed spans, bit-perfectly, while no chunk ever
+    materializes more than the budget. `chunk_log` records the accounting.
+
+    The decoded-block LRU is bypassed (streaming scans would thrash it);
+    wavefront ("global") archives decode whole-prefix by construction and
+    cannot honor a sub-archive budget.
+    """
+
+    def __init__(self, store, max_resident_bytes: Optional[int] = None,
+                 max_blocks_per_chunk: Optional[int] = None,
+                 mode2: bool = True, planner: Optional[QueryPlanner] = None):
+        self.store = store
+        self.planner = planner or QueryPlanner(store)
+        bs = store.block_size
+        if max_resident_bytes is not None and max_resident_bytes < 2 * bs:
+            raise ValueError(
+                f"max_resident_bytes={max_resident_bytes} cannot hold one "
+                f"decoded block + its output; need >= {2 * bs}")
+        self.max_resident_bytes = max_resident_bytes
+        if max_blocks_per_chunk is None:
+            max_blocks_per_chunk = (max(1, max_resident_bytes // (2 * bs))
+                                    if max_resident_bytes is not None
+                                    else store.decoder.da.n_blocks or 1)
+        self.max_blocks_per_chunk = int(max_blocks_per_chunk)
+        self.mode2 = mode2
+        self.chunk_log: List[ChunkStats] = []
+
+    # ------------------------------------------------------------- pieces
+    def _pieces(self, addrs: Sequence[Address]
+                ) -> Iterator[Tuple[int, int]]:
+        """Resolved spans split at K-block boundaries into (start, length)
+        pieces, each covering at most K blocks — so any single piece fits
+        the budget on its own."""
+        starts, lengths, _ = self.planner.resolve(addrs)
+        bs = self.store.block_size
+        K = self.max_blocks_per_chunk
+        for s, ln in zip(starts.tolist(), lengths.tolist()):
+            pos, end = s, s + ln
+            while pos < end:
+                nxt = min(end, (pos // bs + K) * bs)
+                yield pos, nxt - pos
+                pos = nxt
+
+    def chunks(self, addrs: Sequence[Address]) -> Iterator[np.ndarray]:
+        """Yield u8 chunks; their concatenation == the concatenation of the
+        addressed payloads, in address order."""
+        bs = self.store.block_size
+        budget = self.max_resident_bytes
+        cur: List[Tuple[int, int]] = []
+        cur_blocks: set = set()
+        cur_maxlen = 0
+
+        def pow2(n):
+            return 1 << max(0, n - 1).bit_length()
+
+        for s, ln in self._pieces(addrs):
+            pb = set(range(s // bs, -(-(s + ln) // bs)))
+            nblk = len(cur_blocks | pb)
+            # plan_spans pow2-pads the span batch, so the gather output a
+            # chunk materializes is pow2(B) * max_len — cost it that way,
+            # or a 5-span chunk would quietly gather 8 rows past budget
+            cost = nblk * bs + pow2(len(cur) + 1) * max(cur_maxlen, ln)
+            over = ((budget is not None and cost > budget) or
+                    (budget is None and nblk > self.max_blocks_per_chunk))
+            if cur and over:
+                yield self._execute(cur)
+                cur, cur_blocks, cur_maxlen = [], set(), 0
+            cur.append((s, ln))
+            cur_blocks.update(pb)
+            cur_maxlen = max(cur_maxlen, ln)
+        if cur:
+            yield self._execute(cur)
+
+    def _execute(self, pieces) -> np.ndarray:
+        bs = self.store.block_size
+        starts = np.asarray([p[0] for p in pieces], np.int64)
+        lengths = np.asarray([p[1] for p in pieces], np.int64)
+        plan = self.planner.plan_spans(starts, lengths)
+        # exact-size decode (no pow2 pad: padding would double resident
+        # rows and break the budget); greedy packing keeps chunk shapes
+        # near-constant so retracing stays bounded
+        _, r0, _, uniq, row_map = plan.host_cover()
+        dec = self.store.decoder
+        decode = (dec.decode_blocks if self.mode2
+                  else dec.decode_blocks_host_entropy)
+        rows = decode(uniq.astype(np.int32))
+        out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
+                          jnp.asarray(plan.lengths.astype(np.int32)),
+                          block_size=bs, max_len=plan.max_len)
+        host = np.asarray(out[:plan.n_queries])
+        parts = [host[i, :int(lengths[i])] for i in range(len(pieces))]
+        payload = (np.concatenate(parts) if parts
+                   else np.zeros(0, np.uint8))
+        self.chunk_log.append(ChunkStats(
+            n_spans=len(pieces), n_blocks=int(uniq.size),
+            decoded_bytes=int(uniq.size) * bs,
+            gather_bytes=plan.batch * plan.max_len,
+            yielded_bytes=int(payload.size)))
+        return payload
+
+
+class ShardedExecutor:
+    """Execute a plan with the unique-block decode fanned out over a mesh.
+
+    The compressed archive is replicated; the plan's unique covering
+    selection — the decode *work* — shards over the mesh axes, then the
+    ragged gather runs on the assembled rows. Mode-2 only.
+    """
+
+    def __init__(self, store, mesh, axes: Tuple[str, ...] = ("data",)):
+        self.store = store
+        self.mesh = mesh
+        self.axes = axes
+
+    def run(self, plan: DecodePlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        from repro.core.sharded_decode import sharded_decode_blocks
+        B = plan.n_queries
+        if B == 0:
+            return (jnp.zeros((0, plan.max_len), jnp.uint8),
+                    jnp.zeros((0,), jnp.int32))
+        _, r0, _, uniq, row_map = plan.host_cover()
+        rows = sharded_decode_blocks(self.store.decoder, uniq, self.mesh,
+                                     self.axes)
+        out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
+                          jnp.asarray(plan.lengths.astype(np.int32)),
+                          block_size=plan.block_size, max_len=plan.max_len)
+        return out[:B], jnp.asarray(plan.lengths[:B].astype(np.int32))

@@ -1,0 +1,303 @@
+"""Query planning: any batch of addresses → one `DecodePlan`.
+
+This module is THE place the covering-block math lives. Before the query
+plane, three near-duplicate implementations of "which blocks cover these
+output bytes" existed (`residency._fetch_staged`, `decoder.decode_range`,
+and the serving path); they are all shims over `QueryPlanner` now. The
+device-side twin of the same arithmetic lives in
+`residency._fetch_dev_core` (it must: the jitted fast path computes the
+covering set from the device start table), and `covering_blocks` below is
+its host mirror — change one, change both.
+
+A `DecodePlan` is the lowered form of a query batch: absolute byte spans,
+padded batch/output geometry (jit-static), and — lazily, for the staged
+cache/Mode-1/sharded paths — the unique covering-block selection plus the
+ragged row map the gather kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.address import (Address, ByteRange, NameTable, ReadId, Region,
+                               normalize)
+
+
+def span_coords(starts: np.ndarray, lengths: np.ndarray, block_size: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Absolute byte spans → (b0, r0, end_blk): first covering block,
+    in-block offset, exclusive covering end. The one host implementation
+    of the paper's §4 position-invariant coordinate map."""
+    starts = np.asarray(starts, np.int64)
+    lengths = np.asarray(lengths, np.int64)
+    b0 = starts // block_size
+    r0 = (starts - b0 * block_size).astype(np.int32)
+    end_blk = -(-(starts + lengths) // block_size)
+    return b0, r0, end_blk
+
+
+def covering_blocks(starts: np.ndarray, lengths: np.ndarray, block_size: int,
+                    n_blocks: int, max_span: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+    """`span_coords` plus the (B, max_span) cover matrix: slots past a
+    span's last block collapse onto its first block (they dedup away
+    instead of decoding strangers)."""
+    b0, r0, end_blk = span_coords(starts, lengths, block_size)
+    cover = b0[:, None] + np.arange(max_span, dtype=np.int64)[None, :]
+    cover = np.where(cover < end_blk[:, None], cover, b0[:, None])
+    cover = np.clip(cover, 0, n_blocks - 1)
+    return b0, r0, end_blk, cover
+
+
+def pad_pow2_spans(starts: np.ndarray, lengths: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a span batch to the next power of two by repeating the last span
+    (bounded jit variants; dup slots add no unique blocks)."""
+    n = starts.size
+    cap = 1 << max(0, n - 1).bit_length() if n > 1 else 1
+    if cap == n or n == 0:
+        return starts, lengths
+    reps = np.full(cap - n, -1)
+    return (np.concatenate([starts, starts[reps]]),
+            np.concatenate([lengths, lengths[reps]]))
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    """A lowered query batch. `starts`/`lengths` are pow2-padded absolute
+    byte spans; the first `n_queries` rows are the real queries."""
+    starts: np.ndarray            # i64[Bp]
+    lengths: np.ndarray           # i64[Bp]
+    n_queries: int                # pre-padding batch size
+    block_size: int
+    n_blocks: int
+    max_len: int                  # padded output width  (jit-static)
+    max_span: int                 # covering-span bound  (jit-static)
+    device_ids: Optional[np.ndarray] = None   # i32[Bp]: whole-record ids —
+                                  # covering set resolves from the DEVICE
+                                  # start table (the fetch_reads fast path)
+    _cover: Optional[tuple] = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def batch(self) -> int:
+        return int(self.starts.size)
+
+    @property
+    def u_cap(self) -> int:
+        return min(self.batch * self.max_span, self.n_blocks)
+
+    def geom(self) -> tuple:
+        """The static geometry tuple the jitted device pipeline keys on."""
+        return (self.block_size, self.n_blocks, self.max_len, self.max_span,
+                self.u_cap)
+
+    @property
+    def total_payload_bytes(self) -> int:
+        return int(self.lengths[:self.n_queries].sum())
+
+    @property
+    def padded_output_bytes(self) -> int:
+        return self.batch * self.max_len
+
+    # ----------------------------------------------------------- host cover
+    def host_spans(self) -> tuple:
+        """(b0, r0, end_blk) — the cheap per-span covering coordinates the
+        jitted `_fetch_dev_core` path consumes (it deduplicates the
+        covering set on device, so no host unique/row_map is built)."""
+        return span_coords(self.starts, self.lengths, self.block_size)
+
+    def host_cover(self) -> tuple:
+        """(b0, r0, end_blk, unique_blocks, row_map) — computed lazily; only
+        the staged (LRU / Mode-1) and sharded executors need it, the jitted
+        device path recomputes the covering set on device."""
+        if self._cover is None:
+            b0, r0, end_blk, cover = covering_blocks(
+                self.starts, self.lengths, self.block_size, self.n_blocks,
+                self.max_span)
+            uniq = np.unique(cover)
+            row_map = np.searchsorted(uniq, cover).astype(np.int32)
+            self._cover = (b0, r0, end_blk, uniq, row_map)
+        return self._cover
+
+
+class QueryPlanner:
+    """Lowers any batch of addresses to a single DecodePlan.
+
+    Works over a `CompressedResidentStore` (or the bare-decoder adapter in
+    `repro.api.executors`); Region addresses additionally need a
+    `NameTable`. Every legacy decode entry point routes through here.
+    """
+
+    def __init__(self, store, name_table: Optional[NameTable] = None):
+        self.store = store
+        self.name_table = name_table
+        da = store.decoder.da
+        self.block_size = da.block_size
+        self.n_blocks = da.n_blocks
+        self.raw_size = da.raw_size
+
+    # ------------------------------------------------------------ fast paths
+    def plan_read_ids(self, ids: np.ndarray) -> DecodePlan:
+        """All-ReadId batches: geometry is store-static and the covering set
+        resolves from the device start table (zero per-query host math)."""
+        idx = self.store.index
+        if idx is None:
+            raise ValueError("read-id addresses require a ReadIndex")
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= idx.n_reads):
+            raise IndexError(
+                f"read id out of range [0, {idx.n_reads}): "
+                f"{int(ids.min())}..{int(ids.max())}")
+        starts64 = self.store._starts64
+        starts, lengths = pad_pow2_spans(
+            starts64[ids], starts64[ids + 1] - starts64[ids])
+        dev_ids = np.empty(starts.size, np.int64)
+        dev_ids[:ids.size] = ids
+        dev_ids[ids.size:] = ids[-1] if ids.size else 0
+        return DecodePlan(
+            starts=starts, lengths=lengths, n_queries=ids.size,
+            block_size=self.block_size, n_blocks=self.n_blocks,
+            max_len=self.store._max_len, max_span=self.store._max_span,
+            device_ids=dev_ids.astype(np.int32))
+
+    def plan_records(self, ids: np.ndarray, record_bytes: int) -> DecodePlan:
+        """Fixed-size records: arithmetic spans, no index needed (the
+        tokenized-corpus training input path)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0
+                         or (int(ids.max()) + 1) * record_bytes
+                         > self.raw_size):
+            raise IndexError(
+                f"record id out of range for {self.raw_size}-byte archive: "
+                f"{int(ids.min())}..{int(ids.max())} × {record_bytes}B")
+        starts, lengths = pad_pow2_spans(
+            ids * record_bytes,
+            np.full(ids.size, record_bytes, np.int64))
+        return DecodePlan(
+            starts=starts, lengths=lengths, n_queries=ids.size,
+            block_size=self.block_size, n_blocks=self.n_blocks,
+            max_len=record_bytes,
+            max_span=record_bytes // self.block_size + 2)
+
+    def plan_spans(self, starts: np.ndarray, lengths: np.ndarray,
+                   max_len: Optional[int] = None) -> DecodePlan:
+        """Raw absolute byte spans (ByteRange batches, streaming chunks).
+
+        `max_len` widens the padded output geometry past the batch's
+        longest span — callers that see many distinct lengths (e.g.
+        `decode_range`) pass a block-quantized bound so the jitted
+        pipeline retraces per block bucket, not per byte length.
+        """
+        starts = np.asarray(starts, np.int64).reshape(-1)
+        lengths = np.asarray(lengths, np.int64).reshape(-1)
+        if starts.size:
+            if starts.min() < 0 or (starts + lengths).max() > self.raw_size:
+                raise IndexError(
+                    f"byte span out of range [0, {self.raw_size})")
+            if lengths.min() < 0:
+                raise IndexError("negative-length byte span")
+        n = starts.size
+        if max_len is None:
+            max_len = max(1, int(lengths.max(initial=1)))
+        elif lengths.size and max_len < int(lengths.max()):
+            raise ValueError(
+                f"max_len={max_len} below longest span {int(lengths.max())}")
+        b0 = starts // self.block_size
+        end_blk = -(-(starts + lengths) // self.block_size)
+        max_span = max(1, int((end_blk - b0).max(initial=1)))
+        starts, lengths = pad_pow2_spans(starts, lengths)
+        return DecodePlan(
+            starts=starts, lengths=lengths, n_queries=n,
+            block_size=self.block_size, n_blocks=self.n_blocks,
+            max_len=max_len, max_span=max_span)
+
+    # -------------------------------------------------------------- general
+    def resolve(self, addrs: Sequence[Address]
+                ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """Addresses → (starts i64[B], lengths i64[B], whole-record ids or
+        None). Region names resolve through the device-resident NameTable
+        in at most two batched lookups (a full-string pre-pass, then only
+        the parse-produced names). Strings follow samtools precedence:
+        the FULL string is tried as a record name first, so Illumina-style
+        names ending in numeric `:x:y` fields resolve whole-record before
+        any `:start-end` suffix is interpreted as coordinates."""
+        typed = list(addrs)
+        rid_at = {}                    # address index → resolved read id
+        strs = [(i, a.encode() if isinstance(a, str) else bytes(a))
+                for i, a in enumerate(typed)
+                if isinstance(a, (str, bytes))]
+        if strs and self.name_table is not None:
+            hit = self.name_table.lookup([s for _, s in strs],
+                                         missing_ok=True)
+            for (i, s), rid in zip(strs, hit):
+                if rid >= 0:           # full-string name hit: keep the id
+                    typed[i] = Region(s)
+                    rid_at[i] = int(rid)
+                else:
+                    typed[i] = normalize(s)
+        typed = [normalize(a) for a in typed]
+        pending = [(i, a) for i, a in enumerate(typed)
+                   if isinstance(a, Region) and i not in rid_at]
+        if pending:
+            if self.name_table is None:
+                raise ValueError(
+                    "Region addresses require a NameTable (build the "
+                    "archive with names, e.g. GenomicArchive.from_bytes)")
+            looked = self.name_table.lookup([a.name for _, a in pending])
+            rid_at.update((i, int(r)) for (i, _), r in zip(pending, looked))
+
+        starts64 = self.store._starts64
+        idx = self.store.index
+        starts = np.zeros(len(typed), np.int64)
+        lengths = np.zeros(len(typed), np.int64)
+        ids = np.zeros(len(typed), np.int64)
+        whole = True
+        for i, a in enumerate(typed):
+            if isinstance(a, ByteRange):
+                if not 0 <= a.lo <= a.hi <= self.raw_size:
+                    raise IndexError(
+                        f"byte range [{a.lo}, {a.hi}) outside "
+                        f"[0, {self.raw_size})")
+                starts[i], lengths[i] = a.lo, a.hi - a.lo
+                whole = False
+                continue
+            if isinstance(a, ReadId):
+                if idx is None:
+                    raise ValueError("read-id addresses require a ReadIndex")
+                if not 0 <= a.i < idx.n_reads:
+                    raise IndexError(
+                        f"read id {a.i} out of range [0, {idx.n_reads})")
+                rid = a.i
+                lo, hi = 0, None
+            else:                                   # Region
+                rid = rid_at[i]
+                lo, hi = a.start or 0, a.end
+            s, e = int(starts64[rid]), int(starts64[rid + 1])
+            if hi is None:
+                hi = e - s
+            if not 0 <= lo <= hi <= e - s:
+                raise IndexError(
+                    f"region [{lo}, {hi}) outside record {rid} "
+                    f"({e - s} bytes)")
+            starts[i], lengths[i] = s + lo, hi - lo
+            ids[i] = rid
+            whole = whole and lo == 0 and hi == e - s
+        return starts, lengths, (ids if whole and typed else None)
+
+    def plan(self, addrs: Sequence[Address]) -> DecodePlan:
+        """The general entry: any mix of addresses → one DecodePlan. Pure
+        whole-record batches keep the device start-table fast path; span
+        batches quantize the padded width to a block multiple so distinct
+        byte lengths share a jit trace."""
+        if isinstance(addrs, np.ndarray) and addrs.dtype.kind in "iu":
+            return self.plan_read_ids(addrs)
+        starts, lengths, ids = self.resolve(addrs)
+        if ids is not None:
+            return self.plan_read_ids(ids)
+        quant = -(-max(1, int(lengths.max(initial=1)))
+                  // self.block_size) * self.block_size
+        return self.plan_spans(starts, lengths, max_len=quant)

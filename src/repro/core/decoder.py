@@ -297,6 +297,19 @@ class Decoder:
             "n_cmds": self.da.n_cmds, "block_start": self.da.block_start,
             "block_len": self.da.block_len,
         }
+        self._store_view = None
+
+    def _api_store(self):
+        """Store-shaped adapter over this decoder so the host APIs ride the
+        query plane without duplicating the device archive (lazy import:
+        repro.api imports this module)."""
+        if self._store_view is None:
+            from repro.api.executors import DeviceExecutor, _DecoderStore
+            from repro.api.plan import QueryPlanner
+            self._store_view = _DecoderStore(self)
+            self._store_view.planner = QueryPlanner(self._store_view)
+            self._store_view.executor = DeviceExecutor(self._store_view)
+        return self._store_view
 
     def _meta(self, n_sel: int):
         da = self.da
@@ -337,27 +350,26 @@ class Decoder:
 
     # ------------------------------------------------------------ host APIs
     def decode_range(self, lo: int, hi: int, mode2: bool = True) -> np.ndarray:
-        """Decode output byte range [lo, hi) — touches only covering blocks."""
-        bs = self.da.block_size
-        b0, b1 = lo // bs, -(-hi // bs)
-        sel = np.arange(b0, min(b1, self.da.n_blocks))
-        rows = (self.decode_blocks(sel) if mode2
-                else self.decode_blocks_host_entropy(sel))
-        flat = np.asarray(rows).reshape(-1)
-        return flat[lo - b0 * bs: hi - b0 * bs]
+        """Decode output byte range [lo, hi) — touches only covering blocks.
+        Compatibility shim: a one-ByteRange plan through the query plane."""
+        from repro.api.address import ByteRange
+        view = self._api_store()
+        plan = view.planner.plan([ByteRange(lo, hi)])
+        rows, lens = view.executor.run(plan, mode2=mode2)
+        return np.asarray(rows[0])[:int(lens[0])]
 
     def decode_all(self, chunk_blocks: Optional[int] = None,
                    mode2: bool = True) -> np.ndarray:
         """Whole-file decode; with chunk_blocks set, never materializes more
-        than one chunk of decompressed output at a time (paper §5 v7-RA)."""
-        nb = self.da.n_blocks
-        if chunk_blocks is None:
-            chunk_blocks = nb
-        parts = []
-        for b0 in range(0, nb, chunk_blocks):
-            sel = np.arange(b0, min(b0 + chunk_blocks, nb))
-            rows = (self.decode_blocks(sel) if mode2
-                    else self.decode_blocks_host_entropy(sel))
-            parts.append(np.asarray(rows).reshape(-1))
-        out = np.concatenate(parts)[:self.da.raw_size]
-        return out
+        than one chunk of decompressed output at a time (paper §5 v7-RA).
+        Compatibility shim over `StreamingExecutor`."""
+        from repro.api.address import ByteRange
+        from repro.api.executors import StreamingExecutor
+        raw = self.da.raw_size
+        if raw == 0:
+            return np.zeros(0, np.uint8)
+        ex = StreamingExecutor(
+            self._api_store(),
+            max_blocks_per_chunk=chunk_blocks or self.da.n_blocks,
+            mode2=mode2)
+        return np.concatenate(list(ex.chunks([ByteRange(0, raw)])))

@@ -21,7 +21,11 @@ def parse_fastq_records(data: bytes) -> Tuple[np.ndarray, List[bytes]]:
 
     EOF counts as the final line terminator, so FASTQ without a trailing
     newline parses identically. Empty input is zero records (sentinel-only
-    starts), not an error.
+    starts), not an error. Malformed records — header not starting with
+    '@', separator line not starting with '+', or sequence/quality length
+    mismatch — raise ValueError naming the first bad record instead of
+    silently mis-indexing downstream (`FaiIndex.build` would otherwise
+    `bytes.index` its way into the wrong fields).
     """
     if not data:
         return np.zeros(1, np.uint64), []
@@ -34,6 +38,28 @@ def parse_fastq_records(data: bytes) -> Tuple[np.ndarray, List[bytes]]:
             "(each record is @name / sequence / + / quality)")
     line_starts = np.concatenate([[0], ends[:-1] + 1])
     rec_starts = line_starts[0::4]
+    bad = np.flatnonzero(arr[rec_starts] != ord(b"@"))
+    if bad.size:
+        r = int(bad[0])
+        raise ValueError(
+            f"malformed FASTQ record {r}: header line does not start with "
+            f"'@' (got {data[rec_starts[r]:rec_starts[r] + 20]!r})")
+    sep_starts = line_starts[2::4]
+    bad = np.flatnonzero((arr[np.minimum(sep_starts, len(data) - 1)]
+                          != ord(b"+")) | (sep_starts >= ends[2::4]))
+    if bad.size:
+        r = int(bad[0])
+        raise ValueError(
+            f"malformed FASTQ record {r}: third line must start with the "
+            f"'+' separator (got {data[sep_starts[r]:ends[4 * r + 2]]!r})")
+    seq_len = ends[1::4] - line_starts[1::4]
+    qual_len = ends[3::4] - line_starts[3::4]
+    bad = np.flatnonzero(seq_len != qual_len)
+    if bad.size:
+        r = int(bad[0])
+        raise ValueError(
+            f"malformed FASTQ record {r}: sequence is {int(seq_len[r])} "
+            f"bytes but quality is {int(qual_len[r])}")
     names = []
     for i, s in enumerate(rec_starts):
         e = int(ends[4 * i])

@@ -19,6 +19,12 @@ entirely on device. `fetch_read` (single read) and `fetch_records`
 (fixed-size records, the training input path) are thin views over the same
 pipeline. An optional decoded-block LRU cache makes hot blocks skip
 re-decode across calls; the gather stage stays jitted either way.
+
+Since the query-plane redesign, `fetch_reads`/`fetch_records` are
+compatibility shims over `repro.api` (QueryPlanner → DeviceExecutor): the
+covering-block math lives in `repro.api.plan`, and this module keeps the
+jitted device cores (`_fetch_reads_core`, `_fetch_dev_core`,
+`_gather_reads_core`) plus the decoded-block LRU the executors reuse.
 """
 from __future__ import annotations
 
@@ -164,6 +170,16 @@ class CompressedResidentStore:
             self._starts_blk = self._starts_rem = None
             self._starts64 = None
             self._max_len = self._max_span = 1
+        self._planner = self._executor = None
+
+    def _api(self):
+        """Lazy (planner, executor) pair — repro.api imports this module."""
+        if self._planner is None:
+            from repro.api.executors import DeviceExecutor
+            from repro.api.plan import QueryPlanner
+            self._planner = QueryPlanner(self)
+            self._executor = DeviceExecutor(self)
+        return self._planner, self._executor
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> ResidencyStats:
@@ -178,11 +194,6 @@ class CompressedResidentStore:
                 "hits": self.cache_hits, "misses": self.cache_misses}
 
     # ------------------------------------------------------------ internals
-    def _geom(self, batch: int, max_len: int, max_span: int) -> tuple:
-        n_blocks = self.decoder.da.n_blocks
-        return (self.block_size, n_blocks, max_len, max_span,
-                min(batch * max_span, n_blocks))
-
     def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
         """(U,) unique block ids → (U, block_size) decoded rows, through the
         LRU when enabled."""
@@ -209,27 +220,6 @@ class CompressedResidentStore:
             cache.popitem(last=False)
         return out
 
-    def _fetch_staged(self, starts: np.ndarray, lengths: np.ndarray,
-                      max_len: int, max_span: int,
-                      mode2: bool) -> jnp.ndarray:
-        """Host-orchestrated variant of the pipeline (LRU cache / Mode 1):
-        covering-block set on host, decode via `_rows_for_blocks`, then the
-        same jitted ragged gather. Bytes stay on device throughout."""
-        bs = self.block_size
-        n_blocks = self.decoder.da.n_blocks
-        b0 = starts // bs
-        r0 = (starts - b0 * bs).astype(np.int32)
-        end_blk = -(-(starts + lengths) // bs)
-        cover = b0[:, None] + np.arange(max_span, dtype=np.int64)[None, :]
-        cover = np.where(cover < end_blk[:, None], cover, b0[:, None])
-        cover = np.clip(cover, 0, n_blocks - 1)
-        uniq = np.unique(cover)
-        rows = self._rows_for_blocks(uniq, mode2)
-        row_map = np.searchsorted(uniq, cover).astype(np.int32)
-        return _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
-                           jnp.asarray(lengths.astype(np.int32)),
-                           block_size=bs, max_len=max_len)
-
     # -------------------------------------------------------------- lookups
     def fetch_reads(self, ids: Sequence[int], mode2: bool = True
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -237,32 +227,16 @@ class CompressedResidentStore:
 
         (B,) read ids → ((B, max_read_len) u8 zero-padded reads,
         (B,) i32 lengths) in one selection decode. Requires a ReadIndex.
+        Compatibility shim: lowers through the query plane
+        (`QueryPlanner.plan_read_ids` → `DeviceExecutor`).
         """
         assert self.index is not None, "fetch_reads requires a ReadIndex"
         ids_np = np.asarray(ids, np.int64).reshape(-1)
-        B = ids_np.size
-        if B and (ids_np.min() < 0 or ids_np.max() >= self.index.n_reads):
-            raise IndexError(
-                f"read id out of range [0, {self.index.n_reads}): "
-                f"{int(ids_np.min())}..{int(ids_np.max())}")
-        if B == 0:
+        if ids_np.size == 0:
             return (jnp.zeros((0, self._max_len), jnp.uint8),
                     jnp.zeros((0,), jnp.int32))
-        padded = _pad_pow2(ids_np)
-        geom = self._geom(padded.size, self._max_len, self._max_span)
-        if mode2 and self._cache_cap == 0:
-            out, lens = _fetch_reads_jit(
-                self.decoder.arrays, self._starts_blk, self._starts_rem,
-                jnp.asarray(padded, jnp.int32),
-                da_meta=self.decoder._meta(padded.size),
-                backend=self.decoder.backend, geom=geom)
-        else:
-            starts = self._starts64[padded]
-            lens_np = self._starts64[padded + 1] - starts
-            out = self._fetch_staged(starts, lens_np, self._max_len,
-                                     self._max_span, mode2)
-            lens = jnp.asarray(lens_np.astype(np.int32))
-        return out[:B], lens[:B]
+        planner, executor = self._api()
+        return executor.run(planner.plan_read_ids(ids_np), mode2=mode2)
 
     def fetch_read(self, r: int, mode2: bool = True) -> np.ndarray:
         """Single-read random access: the B=1 case of `fetch_reads`."""
@@ -278,34 +252,12 @@ class CompressedResidentStore:
                       mode2: bool = True) -> jnp.ndarray:
         """Batched fixed-record fetch: (B,) ids → (B, record_bytes) u8.
         Same pipeline as `fetch_reads` with arithmetic start offsets, so it
-        needs no index (the tokenized-corpus training input path)."""
+        needs no index (the tokenized-corpus training input path).
+        Compatibility shim over `QueryPlanner.plan_records`."""
         ids_np = np.asarray(ids, np.int64).reshape(-1)
-        B = ids_np.size
-        raw = self.decoder.da.raw_size
-        if B and (ids_np.min() < 0
-                  or (int(ids_np.max()) + 1) * record_bytes > raw):
-            raise IndexError(
-                f"record id out of range for {raw}-byte archive: "
-                f"{int(ids_np.min())}..{int(ids_np.max())} × {record_bytes}B")
-        if B == 0:
+        if ids_np.size == 0:
             return jnp.zeros((0, record_bytes), jnp.uint8)
-        padded = _pad_pow2(ids_np)
-        bs = self.block_size
-        starts = padded * record_bytes
-        lengths = np.full(padded.size, record_bytes, np.int64)
-        max_span = record_bytes // bs + 2   # worst case straddles +1 block
-        geom = self._geom(padded.size, record_bytes, max_span)
-        if mode2 and self._cache_cap == 0:
-            b0 = starts // bs
-            r0 = (starts - b0 * bs).astype(np.int32)
-            end_blk = -(-(starts + record_bytes) // bs)
-            out = _fetch_dev_jit(
-                self.decoder.arrays, jnp.asarray(b0.astype(np.int32)),
-                jnp.asarray(r0), jnp.asarray(lengths.astype(np.int32)),
-                jnp.asarray(end_blk.astype(np.int32)),
-                da_meta=self.decoder._meta(padded.size),
-                backend=self.decoder.backend, geom=geom)
-        else:
-            out = self._fetch_staged(starts, lengths, record_bytes, max_span,
-                                     mode2)
-        return out[:B]
+        planner, executor = self._api()
+        out, _ = executor.run(planner.plan_records(ids_np, record_bytes),
+                              mode2=mode2)
+        return out

@@ -22,9 +22,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.encoder import encode
-from repro.core.index import ReadIndex
-from repro.core.residency import CompressedResidentStore
+from repro.api.archive import GenomicArchive
 
 
 @dataclasses.dataclass
@@ -47,16 +45,12 @@ class CompressedResidentDataLoader:
                  backend: str = "auto"):
         self.cfg = cfg
         rec = cfg.seq_len + 1                     # +1 for shifted labels
-        n_rec = len(corpus) // rec
-        if n_rec == 0:
-            raise ValueError("corpus smaller than one record")
-        corpus = corpus[:n_rec * rec]
-        archive = encode(corpus, block_size=cfg.block_size,
-                         mode="ra", entropy=cfg.entropy)
-        index = ReadIndex.fixed_records(n_rec, rec, cfg.block_size)
-        self.store = CompressedResidentStore(archive, index, backend=backend,
-                                             cache_blocks=cfg.cache_blocks)
-        self.n_records = n_rec
+        self.archive = GenomicArchive.from_records(
+            corpus, record_bytes=rec, block_size=cfg.block_size,
+            entropy=cfg.entropy, backend=backend,
+            cache_blocks=cfg.cache_blocks)
+        self.store = self.archive.store
+        self.n_records = self.archive.n_reads
         self.record_bytes = rec
         self._rng = np.random.default_rng(cfg.seed)
         self.step = 0
@@ -80,7 +74,9 @@ class CompressedResidentDataLoader:
         return ids
 
     def fetch(self, ids: np.ndarray) -> dict:
-        rows = self.store.fetch_records(ids, self.record_bytes)
+        # one facade query per batch: ids lower to a DecodePlan and decode
+        # through the same device pipeline as every other entry point
+        rows, _ = self.archive.query(np.asarray(ids, np.int64))
         toks = rows.astype(jnp.int32)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 

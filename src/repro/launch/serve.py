@@ -1,8 +1,10 @@
 """Serving launcher: batched requests over a compressed-resident corpus.
 
-Requests queue in a `ReadBatcher` and are coalesced into ONE batched
-variable-length `fetch_reads` selection decode (the §4 random-access path
-at serving batch sizes), then generation runs on the fetched contexts.
+Requests address the unified query plane: read ids queue in a
+`ReadBatcher` (duplicate ids dedup to one batch row) and coalesce into ONE
+batched `fetch_reads` selection decode; named `samtools`-style regions
+resolve through the device-resident name table (`GenomicArchive.query`);
+then generation runs on the fetched contexts.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --requests 16 --new-tokens 16
@@ -14,10 +16,8 @@ import numpy as np
 
 import jax
 
+from repro.api import GenomicArchive
 from repro.configs import get_config
-from repro.core import encoder
-from repro.core.index import ReadIndex
-from repro.core.residency import CompressedResidentStore
 from repro.data.fastq import make_fastq
 from repro.models.registry import build_model
 from repro.serving.serve_step import ReadBatcher, ServeConfig, ServeSession
@@ -41,31 +41,40 @@ def main():
     params = model.init(jax.random.key(0))
 
     corpus = make_fastq("platinum", n_reads=3000, seed=0)
-    archive = encoder.encode(corpus, block_size=16 * 1024)
-    store = CompressedResidentStore(
-        archive, ReadIndex.build(corpus, archive.block_size),
-        cache_blocks=args.cache_blocks)
-    st = store.stats()
+    ga = GenomicArchive.from_bytes(corpus, block_size=16 * 1024,
+                                   cache_blocks=args.cache_blocks)
+    st = ga.stats()
     print(f"resident: {st.compressed_device_bytes:,}B compressed of "
-          f"{st.raw_size:,}B ({st.residency_fraction_of_raw:.1%})")
+          f"{st.raw_size:,}B ({st.residency_fraction_of_raw:.1%}), "
+          f"{ga.names.n_names} named reads")
 
-    # ---- batch endpoint: queued requests → one coalesced fetch ----
-    batcher = ReadBatcher(store, max_batch=max(args.requests, 256))
+    # ---- batch endpoint: queued requests → one coalesced, deduped fetch ----
+    batcher = ReadBatcher(ga, max_batch=max(args.requests, 256))
     rng = np.random.default_rng(0)
-    ids = rng.integers(0, store.index.n_reads, size=args.requests)
+    ids = rng.integers(0, ga.n_reads, size=args.requests)
     tickets = [batcher.submit(r) for r in ids]
     t0 = time.perf_counter()
     reads = batcher.flush()
     t_fetch = time.perf_counter() - t0
     print(f"{len(tickets)} queued requests coalesced into "
-          f"{batcher.flushes} fetch(es): {t_fetch*1e3:.1f} ms "
-          f"({len(tickets)/t_fetch:.0f} reads/s) cache={store.cache_info()}")
+          f"{batcher.flushes} fetch(es) of {batcher.unique_fetched} unique "
+          f"rows: {t_fetch*1e3:.1f} ms "
+          f"({len(tickets)/t_fetch:.0f} reads/s) "
+          f"cache={ga.store.cache_info()}")
     assert all(len(reads[t]) > 0 for t in tickets)
+
+    # ---- named region through the device-resident name table ----
+    region = f"SRR0.{int(ids[0])}:1-40"
+    t0 = time.perf_counter()
+    payload = ga[region]
+    print(f"region {region!r}: {bytes(payload[:20])!r}... "
+          f"({(time.perf_counter()-t0)*1e3:.1f} ms, name table "
+          f"{ga.names.device_bytes:,}B device-resident)")
 
     sess = ServeSession(model, params,
                         ServeConfig(max_seq=args.ctx_bytes + args.new_tokens,
                                     max_new_tokens=args.new_tokens),
-                        store=store)
+                        store=ga)
     t0 = time.perf_counter()
     toks = sess.serve_reads(ids.tolist(), ctx_bytes=args.ctx_bytes)
     dt = time.perf_counter() - t0

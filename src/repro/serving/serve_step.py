@@ -8,7 +8,13 @@ decode loop emits tokens step by step.
 `ReadBatcher` is the batch endpoint in front of the store: requests queue
 as they arrive and one `flush()` coalesces them into a single
 `fetch_reads` selection decode — N queued random reads cost one kernel
-pipeline, not N host round-trips.
+pipeline, not N host round-trips. Duplicate read ids within a flush are
+deduplicated: N tickets for the same read cost one batch row, not N.
+
+Both endpoints route through the unified query plane (`repro.api`):
+`fetch_reads` is a shim over QueryPlanner → DeviceExecutor, and
+`ServeSession` accepts any address the `GenomicArchive` facade resolves
+(read ids, named regions) for its request contexts.
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.api.archive import GenomicArchive
 
 
 @dataclasses.dataclass
@@ -32,16 +40,20 @@ class ReadBatcher:
 
     submit(read_id) → ticket; flush() resolves every pending ticket with
     the read's exact bytes, issuing one selection decode per `max_batch`
-    requests (one total when the queue fits the batch).
+    UNIQUE reads (one total when the deduped queue fits the batch).
+    Tickets map onto unique batch rows: duplicate ids anywhere in a flush
+    decode once, regardless of how the queue slices into batches.
     """
 
     def __init__(self, store, max_batch: int = 256):
-        self.store = store
+        self.store = store.store if isinstance(store, GenomicArchive) \
+            else store
         self.max_batch = int(max_batch)
         self._queue: List[_Pending] = []
         self._next_ticket = 0
         self.flushes = 0
         self.served = 0
+        self.unique_fetched = 0
 
     def submit(self, read_id: int) -> int:
         read_id = int(read_id)
@@ -62,17 +74,27 @@ class ReadBatcher:
         requests."""
         out: Dict[int, np.ndarray] = {}
         while self._queue:
-            batch = self._queue[:self.max_batch]
-            ids = np.asarray([p.read_id for p in batch], np.int64)
-            rows, lens = self.store.fetch_reads(ids, mode2=mode2)
+            # dedup across the WHOLE queue, then decode up to max_batch
+            # unique rows per fetch — duplicates never cost a second row
+            # even when they land in different slices
+            uniq = np.unique(np.asarray([p.read_id for p in self._queue],
+                                        np.int64))[:self.max_batch]
+            rows, lens = self.store.fetch_reads(uniq, mode2=mode2)
+            rows, lens = np.asarray(rows), np.asarray(lens)
+            pos = {int(r): j for j, r in enumerate(uniq)}
             # dequeue only after the fetch succeeds: a failure leaves
             # every pending ticket intact for a retry flush
-            self._queue = self._queue[self.max_batch:]
-            rows, lens = np.asarray(rows), np.asarray(lens)
-            for i, p in enumerate(batch):
-                out[p.ticket] = rows[i, :int(lens[i])]
+            remaining = []
+            for p in self._queue:
+                j = pos.get(p.read_id)
+                if j is None:
+                    remaining.append(p)
+                    continue
+                out[p.ticket] = rows[j, :int(lens[j])]
+                self.served += 1
+            self._queue = remaining
             self.flushes += 1
-            self.served += len(batch)
+            self.unique_fetched += int(uniq.size)
         return out
 
 
@@ -88,7 +110,14 @@ class ServeSession:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.store = store
+        if isinstance(store, GenomicArchive):
+            self.archive: Optional[GenomicArchive] = store
+            self.store = store.store
+        elif store is not None:
+            self.archive = GenomicArchive(store)
+            self.store = store
+        else:
+            self.archive = self.store = None
         self._decode = jax.jit(model.decode_step)
 
     def prime(self, contexts: jnp.ndarray) -> Dict:
@@ -116,25 +145,29 @@ class ServeSession:
             toks.append(cur)
         return np.asarray(jnp.concatenate(toks, axis=1))
 
-    def serve_reads(self, read_ids: List[int], ctx_bytes: int,
+    def serve_reads(self, read_ids, ctx_bytes: int,
                     max_new_tokens: Optional[int] = None) -> np.ndarray:
-        """Batched requests addressed by read id: compressed-resident fetch
-        → on-device byte contexts → generate.
+        """Batched requests addressed through the query plane:
+        compressed-resident fetch → on-device byte contexts → generate.
 
-        With a ReadIndex attached, ids address actual variable-length
-        reads (one batched `fetch_reads`, truncated/zero-padded to
-        `ctx_bytes`); otherwise ids address fixed `ctx_bytes` records.
+        With a ReadIndex attached, requests may be read ids OR any address
+        the facade resolves (named regions, `"name:start-end"` strings);
+        the batch lowers to one `GenomicArchive.query` (truncated /
+        zero-padded to `ctx_bytes`). Without an index, ids address fixed
+        `ctx_bytes` records.
         """
         assert self.store is not None, "no compressed-resident store attached"
-        ids = np.asarray(read_ids, np.int64)
-        if getattr(self.store, "index", None) is not None:
-            rows, _ = self.store.fetch_reads(ids)
+        if self.store.index is not None:
+            addrs = (read_ids if isinstance(read_ids, np.ndarray)
+                     else list(read_ids))
+            rows, _ = self.archive.query(addrs)
             if rows.shape[1] >= ctx_bytes:
                 rows = rows[:, :ctx_bytes]
             else:
                 rows = jnp.pad(rows,
                                ((0, 0), (0, ctx_bytes - rows.shape[1])))
         else:
-            rows = self.store.fetch_records(ids, ctx_bytes)
+            rows = self.store.fetch_records(np.asarray(read_ids, np.int64),
+                                            ctx_bytes)
         contexts = rows.astype(jnp.int32)
         return self.generate(contexts, max_new_tokens)

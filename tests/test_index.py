@@ -47,6 +47,26 @@ def test_parse_fastq_truncated_is_helpful():
         parse_fastq_records(b"@r1\nACGT\n+\n")          # missing quality
 
 
+def test_parse_fastq_rejects_malformed_records():
+    """Malformed 4-line records fail loudly instead of silently
+    mis-indexing (FaiIndex.build would bytes.index into wrong fields)."""
+    ok = b"@r0\nACGT\n+\nFFFF\n"
+    with pytest.raises(ValueError, match="record 1.*separator"):
+        parse_fastq_records(ok + b"@r1\nACGT\nX\nFFFF\n")
+    with pytest.raises(ValueError, match="record 1.*quality"):
+        parse_fastq_records(ok + b"@r1\nACGT\n+\nFFF\n")
+    with pytest.raises(ValueError, match="record 1.*header"):
+        parse_fastq_records(ok + b"r1\nACGT\n+\nFFFF\n")
+    with pytest.raises(ValueError, match="separator"):
+        parse_fastq_records(b"@r0\nACGT\n\nFFFF\n")     # empty separator
+    with pytest.raises(ValueError, match="separator"):
+        FaiIndex.build(b"@r0\nACGT\nX\nFFFF\n")
+    # '+' with a comment is legal FASTQ
+    rec = b"@r0\nACGT\n+r0 extra\nFFFF\n"
+    starts, names = parse_fastq_records(rec)
+    assert names == [b"r0"] and starts.tolist() == [0, len(rec)]
+
+
 def test_split_starts_beyond_int31():
     """Regression: device start tables must not truncate u64 offsets —
     archives ≥ 2 GiB previously went through an int32 cast."""

@@ -1,0 +1,270 @@
+"""The unified query plane (`repro.api`): address spaces → DecodePlan →
+executors, and the legacy entry points as shims over it."""
+import numpy as np
+import pytest
+
+from repro.api import (ByteRange, GenomicArchive, NameTable, ReadId, Region,
+                       ShardedExecutor, StreamingExecutor, parse_region)
+from repro.serving.serve_step import ReadBatcher
+
+BS = 4096
+
+
+@pytest.fixture(scope="module")
+def ga(fastq_platinum):
+    return (GenomicArchive.from_bytes(fastq_platinum, block_size=BS,
+                                      backend="ref"),
+            np.frombuffer(fastq_platinum, np.uint8))
+
+
+def _span(ga_, r):
+    return ga_.store.index.lookup(int(r))[:2]
+
+
+# ------------------------------------------------------- address parsing
+def test_parse_region_forms():
+    assert parse_region("SRR0.7") == Region(b"SRR0.7")
+    assert parse_region("SRR0.7:100") == Region(b"SRR0.7", 99, None)
+    assert parse_region("SRR0.7:100-200") == Region(b"SRR0.7", 99, 200)
+    assert parse_region("SRR0.7:100-") == Region(b"SRR0.7", 99, None)
+    # Illumina-style names keep their colons unless a coordinate suffix
+    assert parse_region("M00:1:ABC") == Region(b"M00:1:ABC")
+    assert parse_region(b"M00:1:ABC-2") == Region(b"M00:1:ABC-2")
+    with pytest.raises(ValueError, match="1-based"):
+        parse_region("r:0-5")
+    with pytest.raises(ValueError, match="inverted"):
+        parse_region("r:9-5")
+
+
+# ------------------------------------------- acceptance: one query plane
+def test_entry_points_bit_identical(ga):
+    """fetch_reads, decode_range, and GenomicArchive.query all lower
+    through QueryPlanner and produce bit-identical bytes for the same
+    addresses."""
+    ga_, ref = ga
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, ga_.n_reads, size=32)
+
+    q_rows, q_lens = ga_.query([ReadId(int(i)) for i in ids])
+    f_rows, f_lens = ga_.store.fetch_reads(ids)
+    np.testing.assert_array_equal(np.asarray(q_rows), np.asarray(f_rows))
+    np.testing.assert_array_equal(np.asarray(q_lens), np.asarray(f_lens))
+
+    dec = ga_.store.decoder
+    for i in (0, 7, 31):
+        lo, hi = _span(ga_, ids[i])
+        got_q = np.asarray(q_rows[i])[:int(q_lens[i])]
+        got_r = dec.decode_range(lo, hi)
+        np.testing.assert_array_equal(got_q, got_r)
+        np.testing.assert_array_equal(got_q, ref[lo:hi])
+
+
+def test_query_mixed_address_spaces(ga):
+    """One batch mixing all three address spaces decodes in one plan."""
+    ga_, ref = ga
+    lo7, hi7 = _span(ga_, 7)
+    rows, lens = ga_.query([ReadId(7), ByteRange(100, 900),
+                            Region(b"SRR0.7")])
+    np.testing.assert_array_equal(np.asarray(rows[0])[:int(lens[0])],
+                                  ref[lo7:hi7])
+    np.testing.assert_array_equal(np.asarray(rows[1])[:int(lens[1])],
+                                  ref[100:900])
+    # the named form of read 7 is byte-identical to the id form
+    np.testing.assert_array_equal(np.asarray(rows[2]), np.asarray(rows[0]))
+    assert int(lens[2]) == int(lens[0])
+
+
+def test_empty_query(ga):
+    ga_, _ = ga
+    rows, lens = ga_.query([])
+    assert rows.shape[0] == 0 and lens.shape[0] == 0
+
+
+# --------------------------------------------------------- named regions
+def test_region_straddles_block_boundary_bit_identical(ga):
+    """Region queries whose payload crosses a block boundary match host
+    slicing exactly (the §4 position-invariance claim at region grain)."""
+    ga_, ref = ga
+    idx = ga_.store.index
+    straddlers = [r for r in range(idx.n_reads)
+                  if idx.lookup(r)[0] // BS
+                  != (idx.lookup(r)[1] - 1) // BS]
+    assert straddlers, "fixture must contain block-straddling reads"
+    for r in straddlers[:4]:
+        lo, hi = _span(ga_, r)
+        name = f"SRR0.{r}"
+        # whole record, via the device name table
+        np.testing.assert_array_equal(ga_[name], ref[lo:hi])
+        # sub-region crossing the boundary: stay 1-based inclusive
+        cut = BS * (lo // BS + 1) - lo          # boundary offset in-record
+        s1, e1 = max(1, cut - 10), min(hi - lo, cut + 10)
+        got = ga_[f"{name}:{s1}-{e1}"]
+        np.testing.assert_array_equal(got, ref[lo + s1 - 1:lo + e1])
+
+
+def test_name_table_is_device_resident(ga):
+    import jax
+    ga_, _ = ga
+    nt = ga_.names
+    assert nt.n_names == ga_.n_reads
+    for arr in (nt.key_hi, nt.key_lo, nt.ids):
+        assert isinstance(arr, jax.Array)
+    got = nt.lookup([b"SRR0.0", b"SRR0.123", b"SRR0.7"])
+    np.testing.assert_array_equal(got, [0, 123, 7])
+    with pytest.raises(KeyError, match="no record named"):
+        nt.lookup([b"SRR0.0", b"absent"])
+    with pytest.raises(ValueError, match="duplicate"):
+        NameTable.build([b"a", b"b", b"a"])
+
+
+def test_region_bounds_checked(ga):
+    ga_, _ = ga
+    lo, hi = _span(ga_, 3)
+    with pytest.raises(IndexError, match="region"):
+        ga_.query([Region(b"SRR0.3", 0, hi - lo + 1)])
+
+
+# ------------------------------------------------------------- streaming
+def test_stream_larger_than_budget_bit_perfect(ga):
+    """A whole-archive query through a budget far smaller than the output:
+    bit-perfect reassembly, and no chunk materializes more than the
+    budget (decoded rows + padded gather output)."""
+    ga_, ref = ga
+    budget = 3 * BS
+    assert ga_.raw_size > budget
+    ex = StreamingExecutor(ga_.store, max_resident_bytes=budget,
+                           planner=ga_.planner)
+    chunks = list(ex.chunks([ByteRange(0, ga_.raw_size)]))
+    assert len(chunks) > 1
+    np.testing.assert_array_equal(np.concatenate(chunks), ref)
+    assert len(ex.chunk_log) == len(chunks)
+    for st in ex.chunk_log:
+        assert st.resident_bytes <= budget, st
+        assert st.yielded_bytes <= budget
+
+
+def test_stream_facade_mixed_addresses_in_order(ga):
+    ga_, ref = ga
+    lo3, hi3 = _span(ga_, 3)
+    lo9, hi9 = _span(ga_, 9)
+    addrs = [ReadId(3), ByteRange(10, 5000), Region(b"SRR0.9")]
+    want = np.concatenate([ref[lo3:hi3], ref[10:5000], ref[lo9:hi9]])
+    got = np.concatenate(list(ga_.stream(addrs,
+                                         max_resident_bytes=4 * BS)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stream_budget_accounts_for_pow2_batch_padding(ga):
+    """Regression: plan_spans pow2-pads the span batch, so a chunk of 5
+    spans gathers 8 rows — the packer must cost the padded batch or the
+    chunk quietly overshoots the budget."""
+    ga_, ref = ga
+    budget = 3 * BS
+    spans = [ByteRange(i * 1500, i * 1500 + 1400) for i in range(6)]
+    ex = StreamingExecutor(ga_.store, max_resident_bytes=budget,
+                           planner=ga_.planner)
+    got = np.concatenate(list(ex.chunks(spans)))
+    want = np.concatenate([ref[s.lo:s.hi] for s in spans])
+    np.testing.assert_array_equal(got, want)
+    for st in ex.chunk_log:
+        assert st.resident_bytes <= budget, st
+
+
+def test_full_string_name_precedence_over_coordinate_suffix():
+    """samtools precedence: a record literally named 'M0:3:1101' resolves
+    whole-record even though ':1101' parses as a coordinate suffix."""
+    recs = []
+    for name in (b"M0:3:1101", b"M0:3", b"plain"):
+        recs.append(b"@" + name + b"\nACGTACGTAC\n+\nFFFFFFFFFF\n")
+    data = b"".join(recs)
+    ga_ = GenomicArchive.from_bytes(data, block_size=BS, backend="ref")
+    ref = np.frombuffer(data, np.uint8)
+    # full-string hit → whole record, not Region(b'M0:3', start=1100)
+    np.testing.assert_array_equal(ga_["M0:3:1101"], ref[:len(recs[0])])
+    # string with a true coordinate suffix still slices the named record
+    # (1-based inclusive 2-5 → record bytes [1, 5))
+    s2 = len(recs[0]) + len(recs[1])
+    np.testing.assert_array_equal(ga_["plain:2-5"], ref[s2 + 1:s2 + 5])
+
+
+def test_stream_budget_too_small_rejected(ga):
+    ga_, _ = ga
+    with pytest.raises(ValueError, match="max_resident_bytes"):
+        StreamingExecutor(ga_.store, max_resident_bytes=BS)
+
+
+def test_decode_all_chunked_matches_whole(ga):
+    """decode_all rides StreamingExecutor now; chunked == whole == host."""
+    ga_, ref = ga
+    dec = ga_.store.decoder
+    np.testing.assert_array_equal(dec.decode_all(chunk_blocks=2), ref)
+
+
+# ------------------------------------------------------ batcher dedup
+def test_read_batcher_dedups_duplicate_ids(ga):
+    ga_, ref = ga
+    b = ReadBatcher(ga_)
+    ids = [5, 5, 7, 5, 9, 7, 5]
+    tickets = [b.submit(r) for r in ids]
+    got = b.flush()
+    assert b.served == len(ids) and b.flushes == 1
+    assert b.unique_fetched == 3          # 3 unique rows for 7 tickets
+    for t, r in zip(tickets, ids):
+        lo, hi = _span(ga_, r)
+        np.testing.assert_array_equal(got[t], ref[lo:hi])
+    # duplicate tickets get identical bytes
+    np.testing.assert_array_equal(got[tickets[0]], got[tickets[1]])
+    np.testing.assert_array_equal(got[tickets[0]], got[tickets[3]])
+
+
+def test_read_batcher_dedups_across_batch_slices(ga):
+    """Duplicates that would land in different max_batch slices still
+    decode once: dedup runs over the whole queue, not per slice."""
+    ga_, ref = ga
+    b = ReadBatcher(ga_, max_batch=2)
+    ids = [5, 7, 5, 9, 7, 5]                  # 3 unique, 6 tickets
+    tickets = [b.submit(r) for r in ids]
+    got = b.flush()
+    assert b.served == 6 and b.unique_fetched == 3 and b.flushes == 2
+    for t, r in zip(tickets, ids):
+        lo, hi = _span(ga_, r)
+        np.testing.assert_array_equal(got[t], ref[lo:hi])
+
+
+def test_open_ended_region_to_record_end(ga):
+    ga_, ref = ga
+    lo, hi = _span(ga_, 7)
+    np.testing.assert_array_equal(ga_["SRR0.7:100-"],
+                                  ref[lo + 99:hi])
+
+
+# ------------------------------------------------------ sharded executor
+def test_sharded_executor_matches_device_executor(ga):
+    from repro.compat import make_mesh
+    ga_, _ = ga
+    mesh = make_mesh((1,), ("data",))
+    ids = np.array([0, 5, 31, 5])
+    plan = ga_.plan(ids)
+    s_rows, s_lens = ShardedExecutor(ga_.store, mesh).run(plan)
+    f_rows, f_lens = ga_.store.fetch_reads(ids)
+    np.testing.assert_array_equal(np.asarray(s_rows), np.asarray(f_rows))
+    np.testing.assert_array_equal(np.asarray(s_lens), np.asarray(f_lens))
+
+
+# ------------------------------------------------------------- facade
+def test_getitem_forms(ga):
+    ga_, ref = ga
+    lo, hi = _span(ga_, 11)
+    np.testing.assert_array_equal(ga_[200:700], ref[200:700])
+    np.testing.assert_array_equal(ga_[11], ref[lo:hi])
+    np.testing.assert_array_equal(ga_["SRR0.11"], ref[lo:hi])
+    assert len(ga_) == ga_.n_reads
+
+
+def test_plan_geometry_sane(ga):
+    ga_, _ = ga
+    plan = ga_.plan([ByteRange(0, 10), ByteRange(BS - 1, BS + 1)])
+    b0, r0, end_blk, uniq, row_map = plan.host_cover()
+    assert uniq.tolist() == [0, 1]                # one shared block set
+    assert plan.max_span == 2 and plan.n_queries == 2
+    assert row_map.shape == (plan.batch, plan.max_span)
