@@ -19,6 +19,8 @@ _TABLES = [
     ("index", "benchmarks.bench_index", "§4.1: read index vs .fai"),
     ("fetch_batch", "benchmarks.bench_fetch_batch",
      "serving: batched variable-length random access"),
+    ("cache", "benchmarks.bench_cache",
+     "serving: device-resident block cache (Zipfian working set)"),
     ("query", "benchmarks.bench_query",
      "api: unified query plane (plan lowering + region latency)"),
     ("scale", "benchmarks.bench_scale", "§5: range decode / memory budget"),

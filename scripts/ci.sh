@@ -11,4 +11,6 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m compileall -q src
 python -m pytest -x -q "$@"
-python -m benchmarks.run --small --only index,fetch_batch,query
+# bench smoke: index/fetch/query planes, the block-size sweep (the
+# regime that exposed the u16 offset truncation), and the block cache
+python -m benchmarks.run --small --only index,fetch_batch,query,blocksize,cache

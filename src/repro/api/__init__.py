@@ -12,13 +12,17 @@ compatibility shims over this layer.
 from repro.api.address import (Address, ByteRange, NameTable, ReadId, Region,
                                normalize, parse_region)
 from repro.api.archive import GenomicArchive
+from repro.api.cache import (BlockCache, EvictionPolicy, FrequencyPolicy,
+                             LRUPolicy, PinRangePolicy)
 from repro.api.executors import (ChunkStats, DeviceExecutor, ShardedExecutor,
                                  StreamingExecutor)
-from repro.api.plan import DecodePlan, QueryPlanner, covering_blocks
+from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
+                            covering_blocks)
 
 __all__ = [
-    "Address", "ByteRange", "ChunkStats", "DecodePlan",
-    "DeviceExecutor", "GenomicArchive", "NameTable", "QueryPlanner",
-    "ReadId", "Region", "ShardedExecutor", "StreamingExecutor",
-    "covering_blocks", "normalize", "parse_region",
+    "Address", "BlockCache", "ByteRange", "CachePlan", "ChunkStats",
+    "DecodePlan", "DeviceExecutor", "EvictionPolicy", "FrequencyPolicy",
+    "GenomicArchive", "LRUPolicy", "NameTable", "PinRangePolicy",
+    "QueryPlanner", "ReadId", "Region", "ShardedExecutor",
+    "StreamingExecutor", "covering_blocks", "normalize", "parse_region",
 ]

@@ -45,9 +45,11 @@ class GenomicArchive:
     @classmethod
     def from_bytes(cls, data: bytes, block_size: int = 16 * 1024,
                    mode: str = "ra", entropy: str = "rans",
-                   backend: str = "auto", cache_blocks: int = 0
-                   ) -> "GenomicArchive":
-        """FASTQ bytes → encoded archive + ReadIndex + device name table."""
+                   backend: str = "auto", cache_blocks: int = 0,
+                   cache_policy="lru") -> "GenomicArchive":
+        """FASTQ bytes → encoded archive + ReadIndex + device name table.
+        cache_blocks > 0 enables the device-resident decoded-block cache
+        ("lru" | "freq" | an `EvictionPolicy` instance)."""
         from repro.core.encoder import encode
         from repro.core.index import ReadIndex, parse_fastq_records
         from repro.core.residency import CompressedResidentStore
@@ -56,14 +58,16 @@ class GenomicArchive:
                          entropy=entropy)
         index = ReadIndex(starts=starts, block_size=block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
-                                        cache_blocks=cache_blocks)
+                                        cache_blocks=cache_blocks,
+                                        cache_policy=cache_policy)
         return cls(store, names=names)
 
     @classmethod
     def from_records(cls, data: bytes, record_bytes: int,
                      block_size: int = 16 * 1024, mode: str = "ra",
                      entropy: str = "rans", backend: str = "auto",
-                     cache_blocks: int = 0) -> "GenomicArchive":
+                     cache_blocks: int = 0,
+                     cache_policy="lru") -> "GenomicArchive":
         """Fixed-size records (tokenized corpora): arithmetic index, no
         names. `data` is truncated to a whole number of records."""
         from repro.core.encoder import encode
@@ -77,7 +81,8 @@ class GenomicArchive:
                          entropy=entropy)
         index = ReadIndex.fixed_records(n_rec, record_bytes, block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
-                                        cache_blocks=cache_blocks)
+                                        cache_blocks=cache_blocks,
+                                        cache_policy=cache_policy)
         return cls(store)
 
     # ------------------------------------------------------------- queries
@@ -130,6 +135,11 @@ class GenomicArchive:
 
     def stats(self):
         return self.store.stats()
+
+    def cache_info(self) -> dict:
+        """Decoded-block cache counters: hits/misses/evictions/installs,
+        bytes_resident, decode_launches, policy (zeros when disabled)."""
+        return self.store.cache_info()
 
     def __repr__(self) -> str:
         st = self.stats()

@@ -1,0 +1,337 @@
+"""Device-resident decoded-block cache, planned at the DecodePlan level.
+
+The old decoded-block LRU was a host OrderedDict of device rows with a
+Python loop per block — exactly the data-preparation bottleneck SAGe
+(arXiv 2504.03732) identifies, and the per-block host round-trips negated
+the device-residency advantage over CPU random-access decompressors
+(Kerbiriou & Chikhi, arXiv 1905.07224). This module replaces it:
+
+  * one preallocated (capacity, block_size) u8 buffer lives on device;
+    decoded bytes never leave it,
+  * a host block-id → slot map splits a plan's unique covering set into
+    hit slots and miss blocks with vectorized numpy (`CachePlan`, defined
+    next to `DecodePlan` in `repro.api.plan`),
+  * the miss set decodes in ONE pow2-padded launch, and
+  * a single jitted scatter/gather (buffer donated, updated in place)
+    installs the admitted rows and assembles the (U, block_size) row
+    tensor the ragged gather consumes.
+
+Eviction/admission is pluggable: `LRUPolicy` (recency), `FrequencyPolicy`
+(frequency-aware admission — Zipfian serving working sets should not let
+one-hit wonders evict hot blocks), and `PinRangePolicy` (hot prefixes
+stay resident unconditionally).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.plan import CachePlan, split_cache_hits
+from repro.core.residency import _pad_pow2
+
+
+# ------------------------------------------------------------------ policies
+class EvictionPolicy:
+    """Pluggable eviction/admission. The cache calls, in order per access:
+
+      bind(cache)                 once — size per-slot/per-block state
+      admit(miss_blocks) → mask   which missed blocks may claim a slot
+      victims(k, evictable) → slots   up to k slots to evict, chosen from
+                                  the boolean `evictable` mask (never a
+                                  slot the current request reads)
+      touch(slots, blocks)        every access (hits + fresh installs)
+    """
+
+    name = "none"
+
+    def bind(self, cache: "BlockCache") -> None:
+        self.cache = cache
+
+    def admit(self, miss_blocks: np.ndarray) -> np.ndarray:
+        return np.ones(miss_blocks.size, bool)
+
+    def victims(self, k: int, evictable: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def touch(self, slots: np.ndarray, blocks: np.ndarray) -> None:
+        pass
+
+
+class LRUPolicy(EvictionPolicy):
+    """Least-recently-used eviction, admit-everything."""
+
+    name = "lru"
+
+    def bind(self, cache: "BlockCache") -> None:
+        super().bind(cache)
+        self._last = np.zeros(cache.capacity, np.int64)
+        self._tick = 0
+
+    def victims(self, k: int, evictable: np.ndarray) -> np.ndarray:
+        cand = np.flatnonzero(evictable)
+        return cand[np.argsort(self._last[cand], kind="stable")[:k]]
+
+    def touch(self, slots: np.ndarray, blocks: np.ndarray) -> None:
+        self._tick += 1
+        self._last[slots] = self._tick
+
+
+class FrequencyPolicy(LRUPolicy):
+    """Frequency-aware admission + least-frequency eviction (LRU
+    tie-break). A missed block is admitted only once it has been requested
+    `admit_after` times — under a Zipfian serving working set the hot head
+    recurs immediately while the cold tail's one-hit wonders never earn a
+    slot, so they cannot thrash the resident head."""
+
+    name = "freq"
+
+    def __init__(self, admit_after: int = 2):
+        self.admit_after = int(admit_after)
+
+    def bind(self, cache: "BlockCache") -> None:
+        super().bind(cache)
+        self._freq = np.zeros(cache.n_blocks, np.int64)
+
+    def admit(self, miss_blocks: np.ndarray) -> np.ndarray:
+        self._freq[miss_blocks] += 1          # count the sighting itself
+        return self._freq[miss_blocks] >= self.admit_after
+
+    def victims(self, k: int, evictable: np.ndarray) -> np.ndarray:
+        cand = np.flatnonzero(evictable)
+        blocks = self.cache.slot_block[cand]
+        order = np.lexsort((self._last[cand], self._freq[blocks]))
+        return cand[order[:k]]
+
+    def touch(self, slots: np.ndarray, blocks: np.ndarray) -> None:
+        super().touch(slots, blocks)
+        self._freq[blocks] += 1
+
+
+class PinRangePolicy(EvictionPolicy):
+    """Pin the block range [lo, hi): pinned blocks are always admitted and
+    never evicted (hot-prefix residency — headers, dictionaries, the first
+    chromosome); everything else is managed by `inner` (default LRU)."""
+
+    def __init__(self, lo: int, hi: int,
+                 inner: Optional[EvictionPolicy] = None):
+        if lo > hi:
+            raise ValueError(f"inverted pin range [{lo}, {hi})")
+        self.lo, self.hi = int(lo), int(hi)
+        self.inner = inner or LRUPolicy()
+        self.name = f"pin[{lo},{hi})+{self.inner.name}"
+
+    def bind(self, cache: "BlockCache") -> None:
+        super().bind(cache)
+        self.inner.bind(cache)
+
+    def _pinned(self, blocks: np.ndarray) -> np.ndarray:
+        return (blocks >= self.lo) & (blocks < self.hi)
+
+    def admit(self, miss_blocks: np.ndarray) -> np.ndarray:
+        return self._pinned(miss_blocks) | self.inner.admit(miss_blocks)
+
+    def victims(self, k: int, evictable: np.ndarray) -> np.ndarray:
+        evictable = evictable & ~self._pinned(self.cache.slot_block)
+        if not evictable.any():
+            return np.zeros(0, np.int64)
+        return self.inner.victims(k, evictable)
+
+    def touch(self, slots: np.ndarray, blocks: np.ndarray) -> None:
+        self.inner.touch(slots, blocks)
+
+
+_POLICIES = {"lru": LRUPolicy, "freq": FrequencyPolicy}
+
+
+def make_policy(policy: Union[str, EvictionPolicy]) -> EvictionPolicy:
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown cache policy {policy!r} (have {sorted(_POLICIES)}, "
+            f"or pass an EvictionPolicy instance)") from None
+
+
+# ------------------------------------------------------------- jitted device
+@partial(jax.jit, donate_argnums=(0,))
+def _install_gather(buf, miss_rows, install_slots, src_is_miss, src_idx):
+    """ONE device step for a CachePlan with misses: scatter the admitted
+    miss rows into their slots (buffer donated → in-place), then gather
+    the (U, block_size) row tensor — hits from the buffer, misses straight
+    from the fresh decode. `install_slots == capacity` entries drop."""
+    buf = buf.at[install_slots].set(miss_rows, mode="drop")
+    from_buf = buf[jnp.where(src_is_miss, 0, src_idx)]
+    from_miss = miss_rows[jnp.where(src_is_miss, src_idx, 0)]
+    rows = jnp.where(src_is_miss[:, None], from_miss, from_buf)
+    return buf, rows
+
+
+@jax.jit
+def _gather_slots(buf, slots):
+    """All-hit fast path: one device gather, no decode launch at all."""
+    return buf[slots]
+
+
+# ------------------------------------------------------------------- cache
+class BlockCache:
+    """Preallocated (capacity, block_size) u8 device buffer + host
+    block-id → slot map, with pluggable eviction/admission.
+
+    `plan(uniq)` is the CachePlan step: vectorized hit/miss split + slot
+    assignment (mutating the maps and policy state); `realize(plan,
+    decode)` turns it into bytes — at most one decode launch (the
+    pow2-padded miss set) and one jitted scatter/gather. No per-block
+    Python, and decoded bytes never leave the device.
+    """
+
+    def __init__(self, capacity: int, block_size: int, n_blocks: int,
+                 policy: Union[str, EvictionPolicy] = "lru"):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self.block_size = int(block_size)
+        self.n_blocks = int(n_blocks)
+        self.buf = jnp.zeros((self.capacity, self.block_size), jnp.uint8)
+        self.slot_block = np.full(self.capacity, -1, np.int64)
+        self.slot_of = np.full(self.n_blocks, -1, np.int32)
+        self.policy = make_policy(policy)
+        self.policy.bind(self)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.installs = 0
+        self.decode_launches = 0
+
+    # --------------------------------------------------------------- stats
+    @property
+    def resident(self) -> int:
+        return int((self.slot_block >= 0).sum())
+
+    @property
+    def bytes_resident(self) -> int:
+        return self.resident * self.block_size
+
+    def info(self) -> dict:
+        return {"capacity": self.capacity, "resident": self.resident,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "installs": self.installs,
+                "bytes_resident": self.bytes_resident,
+                "buffer_bytes": self.capacity * self.block_size,
+                "decode_launches": self.decode_launches,
+                "policy": self.policy.name}
+
+    # ---------------------------------------------------------------- plan
+    def plan(self, uniq: np.ndarray) -> CachePlan:
+        """Unique covering set → CachePlan. Mutates the slot maps (evicted
+        blocks leave, admitted misses claim their slots) and the policy's
+        recency/frequency state; the device buffer itself only changes in
+        `realize`."""
+        uniq = np.asarray(uniq, np.int64).reshape(-1)
+        hit_mask, slots = split_cache_hits(uniq, self.slot_of)
+        hit_slots = slots[hit_mask]
+        miss_blocks = uniq[~hit_mask]
+        self.hits += int(hit_mask.sum())
+        self.misses += int(miss_blocks.size)
+        self.policy.touch(hit_slots, uniq[hit_mask])
+
+        # slot assignment for admitted misses: free slots first, then
+        # policy-chosen victims — never a slot this request reads
+        admit = (self.policy.admit(miss_blocks) if miss_blocks.size
+                 else np.zeros(0, bool))
+        free = np.flatnonzero(self.slot_block < 0)
+        need = int(admit.sum()) - free.size
+        evicted = np.zeros(0, np.int64)
+        if need > 0:
+            evictable = np.ones(self.capacity, bool)
+            evictable[free] = False
+            evictable[hit_slots] = False
+            evicted = np.asarray(self.policy.victims(need, evictable),
+                                 np.int64)
+        avail = np.concatenate([free, evicted])
+        if avail.size < int(admit.sum()):
+            # capacity exhausted (hits + pins occupy everything): trailing
+            # admitted misses decode for this request but do not install
+            drop = np.flatnonzero(admit)[avail.size:]
+            admit[drop] = False
+        if evicted.size:
+            self.slot_of[self.slot_block[evicted]] = -1
+            self.slot_block[evicted] = -1
+            self.evictions += int(evicted.size)
+
+        install_slots = np.full(miss_blocks.size, self.capacity, np.int32)
+        take = np.flatnonzero(admit)
+        install_slots[take] = avail[:take.size]
+        if take.size:
+            self.slot_block[install_slots[take]] = miss_blocks[take]
+            self.slot_of[miss_blocks[take]] = install_slots[take]
+            self.installs += int(take.size)
+            self.policy.touch(install_slots[take], miss_blocks[take])
+
+        # row sources: hits read their slot, misses read their decode row
+        src_is_miss = ~hit_mask
+        src_idx = np.empty(uniq.size, np.int32)
+        src_idx[hit_mask] = hit_slots
+        src_idx[~hit_mask] = np.arange(miss_blocks.size, dtype=np.int32)
+        return CachePlan(
+            uniq=uniq, src_is_miss=src_is_miss, src_idx=src_idx,
+            miss_blocks=miss_blocks, install_slots=install_slots,
+            n_hits=int(hit_mask.sum()), n_misses=int(miss_blocks.size),
+            n_installed=int(take.size), n_evicted=int(evicted.size))
+
+    def reset(self) -> None:
+        """Drop every resident block and reallocate the buffer (counters
+        survive). Also the failure path: `realize` resets on any decode /
+        install error, because `plan` has already registered the miss
+        blocks as resident — serving zeros for them later would violate
+        bit-perfectness silently."""
+        self.buf = jnp.zeros((self.capacity, self.block_size), jnp.uint8)
+        self.slot_block.fill(-1)
+        self.slot_of.fill(-1)
+        self.policy.bind(self)
+
+    # ------------------------------------------------------------- realize
+    def realize(self, cp: CachePlan,
+                decode: Callable[[np.ndarray], jnp.ndarray]) -> jnp.ndarray:
+        """CachePlan → (U, block_size) u8 device rows. All-hit plans are a
+        single buffer gather; otherwise the miss set decodes in ONE
+        pow2-padded launch and one jitted scatter/gather installs the new
+        rows in place (buffer donation) while assembling the output."""
+        U = cp.n_uniq
+        if U == 0:
+            return jnp.zeros((0, self.block_size), jnp.uint8)
+        if cp.miss_blocks.size == 0:
+            slots = _pad_pow2(cp.src_idx.astype(np.int32))
+            return _gather_slots(self.buf, jnp.asarray(slots))[:U]
+        miss_sel = _pad_pow2(cp.miss_blocks.astype(np.int32))
+        try:
+            miss_rows = decode(miss_sel)
+            self.decode_launches += 1
+            # pad the install/source vectors to the padded geometries so
+            # jit retraces stay bounded; pad installs drop, pad sources
+            # repeat the last real entry
+            inst = _pad_pow2(cp.install_slots.astype(np.int32),
+                             fill=self.capacity)   # same pow2 as miss_sel
+            src_idx = _pad_pow2(cp.src_idx.astype(np.int32))
+            src_is_miss = _pad_pow2(cp.src_is_miss)
+            self.buf, rows = _install_gather(
+                self.buf, miss_rows, jnp.asarray(inst),
+                jnp.asarray(src_is_miss), jnp.asarray(src_idx))
+        except BaseException:
+            # plan() already marked the misses resident, and a failed
+            # _install_gather may have consumed the donated buffer —
+            # drop everything rather than serve zero rows as hits
+            self.reset()
+            raise
+        return rows[:U]
+
+    def rows_for(self, uniq: np.ndarray,
+                 decode: Callable[[np.ndarray], jnp.ndarray]) -> jnp.ndarray:
+        """plan + realize in one call (the store's `_rows_for_blocks`)."""
+        return self.realize(self.plan(uniq), decode)

@@ -4,10 +4,11 @@ DeviceExecutor     — one jitted pipeline (`_fetch_dev_core` underneath):
                      entropy decode → match resolve → ragged gather, fully
                      on device. Whole-record plans additionally resolve
                      their covering set from the device start table
-                     (`_fetch_reads_core`), and the decoded-block LRU /
-                     Mode-1 paths fall back to the staged variant (host
-                     covering set from the plan, decode through the
-                     store's cache, same jitted gather).
+                     (`_fetch_reads_core`), and the block-cache / Mode-1
+                     paths fall back to the staged variant: host covering
+                     set from the plan, rows through the device-resident
+                     `BlockCache` (CachePlan hit/miss split, one decode
+                     launch per miss set), same jitted gather.
 StreamingExecutor  — a VRAM-budgeted chunked iterator over a plan: the
                      paper's §5 range-decode contribution generalized so
                      ANY query larger than `max_resident_bytes` streams
@@ -37,6 +38,7 @@ class _DecoderStore:
 
     index = None
     _starts64 = None
+    _cache = None
     _cache_cap = 0
     _max_len = _max_span = 1
 
@@ -87,8 +89,9 @@ class DeviceExecutor:
                 da_meta=dec._meta(plan.batch), backend=dec.backend,
                 geom=plan.geom())
             return out[:B], lens
-        # staged: decode through the LRU / Mode-1 host entropy stage, then
-        # the same jitted ragged gather. Bytes stay on device throughout.
+        # staged: rows through the device-resident block cache (one decode
+        # launch per miss set) / the Mode-1 host entropy stage, then the
+        # same jitted ragged gather. Bytes stay on device throughout.
         _, r0, _, uniq, row_map = plan.host_cover()
         rows = store._rows_for_blocks(uniq, mode2)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
@@ -101,11 +104,15 @@ class DeviceExecutor:
 class ChunkStats:
     """Per-chunk residency accounting (asserted against the budget in
     tests: decoded rows + padded gather output are what the chunk
-    materializes beyond the compressed archive itself)."""
+    materializes beyond the compressed archive itself). `decoded_bytes`
+    is exact (the block selection is NOT pow2-padded — see `_execute`);
+    `gather_bytes` counts the pow2-padded span batch `plan_spans`
+    produces, because that padded (batch, max_len) matrix is what the
+    gather really materializes."""
     n_spans: int
     n_blocks: int
-    decoded_bytes: int        # unique covering rows: U * block_size
-    gather_bytes: int         # padded gather output: B * max_len
+    decoded_bytes: int        # unique covering rows: U * block_size (exact)
+    gather_bytes: int         # padded gather output: pow2(B) * max_len
     yielded_bytes: int
 
     @property
@@ -199,9 +206,13 @@ class StreamingExecutor:
         starts = np.asarray([p[0] for p in pieces], np.int64)
         lengths = np.asarray([p[1] for p in pieces], np.int64)
         plan = self.planner.plan_spans(starts, lengths)
-        # exact-size decode (no pow2 pad: padding would double resident
-        # rows and break the budget); greedy packing keeps chunk shapes
-        # near-constant so retracing stays bounded
+        # plan_spans pow2-pads the SPAN batch, so the gather output is
+        # pow2(B) * max_len — `chunks` costs it that way and gather_bytes
+        # records it. The block-selection decode below stays exact-size
+        # (pow2-padding the unique rows could double resident bytes and
+        # break the budget); greedy packing keeps chunk shapes
+        # near-constant so retracing stays bounded. The block cache is
+        # bypassed here — streaming scans would thrash it.
         _, r0, _, uniq, row_map = plan.host_cover()
         dec = self.store.decoder
         decode = (dec.decode_blocks if self.mode2

@@ -124,6 +124,39 @@ class DecodePlan:
         return self._cover
 
 
+@dataclasses.dataclass
+class CachePlan:
+    """The cache step of a DecodePlan: its unique covering set split into
+    buffer-resident hits and a miss set, with the cache slots the admitted
+    misses will install into. Produced by `BlockCache.plan`
+    (`repro.api.cache`) with vectorized numpy — no per-block Python — and
+    consumed by one decode launch over the pow2-padded miss set plus one
+    jitted scatter/gather that installs the new rows and assembles the
+    (U, block_size) row tensor."""
+    uniq: np.ndarray            # i64[U] unique covering block ids
+    src_is_miss: np.ndarray     # bool[U]: row comes from the miss decode
+    src_idx: np.ndarray         # i32[U]: cache slot (hit) | miss row (miss)
+    miss_blocks: np.ndarray     # i64[M] blocks needing decode (ONE launch)
+    install_slots: np.ndarray   # i32[M]: slot per miss; == capacity when
+                                # the policy did not admit the block
+    n_hits: int
+    n_misses: int
+    n_installed: int
+    n_evicted: int
+
+    @property
+    def n_uniq(self) -> int:
+        return int(self.uniq.size)
+
+
+def split_cache_hits(uniq: np.ndarray, slot_of: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized hit/miss split of a covering set against a block-id →
+    slot map (-1 = absent): returns (hit_mask bool[U], slots i32[U])."""
+    slots = slot_of[np.asarray(uniq, np.int64)]
+    return slots >= 0, slots
+
+
 class QueryPlanner:
     """Lowers any batch of addresses to a single DecodePlan.
 

@@ -23,8 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import entropy as ent
-from repro.core.format import (N_STREAMS, S_COMMANDS, S_LENGTHS, S_LITERALS,
-                               S_OFFSETS, Archive, MAX_LANES)
+from repro.core.format import (FNV_OFFSET, N_STREAMS, S_COMMANDS, S_LENGTHS,
+                               S_LITERALS, S_OFFSETS, Archive, MAX_LANES,
+                               file_digest)
+
+
+class BlockDigestError(ValueError):
+    """A decoded block's FNV-1a-64 digest does not match the archive's."""
 
 
 # --------------------------------------------------------------- device form
@@ -116,14 +121,17 @@ def _u16_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
     return jnp.where(j < n_cmds[:, None], v, 0)
 
 
-def _u64lo_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
-                       max_cmds: int) -> jnp.ndarray:
-    """8-plane global offsets → low 31 bits as i32 (device decode addresses
-    < 2^31; the host format keeps full 64-bit)."""
+def _u32_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
+                     max_cmds: int) -> jnp.ndarray:
+    """First-4-plane little-endian u32 → (B, max_cmds) i32 (top bit masked:
+    device decode addresses stay < 2^31). Decodes the 4-plane block-local
+    offsets of `offset_bytes=4` archives (block_size > 0xFFFF, where two
+    planes would truncate) and, as `_u64lo_from_planes`, the low word of
+    8-plane global offsets."""
     nc = n_cmds[:, None]
     j = jnp.arange(max_cmds, dtype=jnp.int32)[None, :]
     v = jnp.zeros(planes.shape[:1] + (max_cmds,), jnp.int32)
-    for b in range(4):  # 4 bytes = 32 bits (top bit unused)
+    for b in range(4):
         idx = jnp.minimum(b * nc + j, planes.shape[1] - 1)
         byte = jnp.take_along_axis(planes.astype(jnp.int32), idx, axis=1)
         shift = 8 * b
@@ -131,6 +139,13 @@ def _u64lo_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
             byte = byte & 0x7F
         v = v | (byte << shift)
     return jnp.where(j < nc, v, 0)
+
+
+def _u64lo_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
+                       max_cmds: int) -> jnp.ndarray:
+    """8-plane global offsets → low 31 bits as i32 (device decode addresses
+    < 2^31; the host format keeps full 64-bit)."""
+    return _u32_from_planes(planes, n_cmds, max_cmds)
 
 
 def _entropy_decode_sel(da: DeviceArchive, sel: jnp.ndarray, backend: str):
@@ -144,7 +159,7 @@ def _entropy_decode_sel(da: DeviceArchive, sel: jnp.ndarray, backend: str):
     woff = da.word_off[sel]          # (B, 4)
     nsym = da.n_syms[sel]
     lanes = da.lanes[sel]
-    off_planes = 2 if da.offset_bytes == 2 else 8
+    off_planes = da.offset_bytes     # one plane per offset byte (2 | 4 | 8)
 
     if da.entropy == "raw":
         def unpack(col, out_len):
@@ -208,7 +223,7 @@ def _entropy_decode_host(a: Archive, sel: np.ndarray):
         streams = ent.rans_decode_batch_np(a.words, woff, nsym, lanes, cls,
                                            a.freqs)
     max_cmds = int(a.n_cmds.max(initial=1))
-    off_planes = 2 if a.offset_bytes == 2 else 8
+    off_planes = a.offset_bytes
 
     def pad_to(arr, L):
         out = np.zeros(L, np.uint8)
@@ -237,7 +252,9 @@ def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
     if offset_bytes == 2:
         offsets = _u16_from_planes(streams["offsets"], n_cmds, max_cmds)
     else:
-        offsets = _u64lo_from_planes(streams["offsets"], n_cmds, max_cmds)
+        # 4-plane block-local ("ra", block_size > 0xFFFF) and 8-plane
+        # global offsets both read the first 4 planes
+        offsets = _u32_from_planes(streams["offsets"], n_cmds, max_cmds)
 
     if da_mode == "ra":
         return ops.lz77_decode_blocks(
@@ -276,6 +293,60 @@ def _decode_sel_core(arrays, sel, da_meta, backend):
 
 _decode_sel_jit = partial(jax.jit, static_argnames=("da_meta", "backend"))(
     _decode_sel_core)
+
+
+# ------------------------------------------------------------ digest verify
+def _fnv_mul_u32(hi: jnp.ndarray, lo: jnp.ndarray):
+    """(hi, lo) u32 pair × FNV prime (2^40 + 0x1B3) mod 2^64, in 16-bit
+    limbs — the device runs without x64, so the 64-bit recurrence is
+    emulated on u32 halves."""
+    m = jnp.uint32(0x1B3)
+    c0 = (lo & 0xFFFF) * m
+    c1 = (lo >> 16) * m + (c0 >> 16)
+    c2 = (hi & 0xFFFF) * m + (c1 >> 16)
+    c3 = (hi >> 16) * m + (c2 >> 16)
+    t_lo = (c0 & 0xFFFF) | ((c1 & 0xFFFF) << 16)
+    t_hi = (c2 & 0xFFFF) | ((c3 & 0xFFFF) << 16)
+    # + (value << 40) mod 2^64: only the low word contributes, shifted
+    # into the high word
+    return t_hi + (lo << 8), t_lo
+
+
+def _fnv_rows_core(rows: jnp.ndarray, block_len: jnp.ndarray):
+    """(B, S) u8 decoded rows → per-row 8-byte-stride FNV-1a-64 as u32
+    (hi, lo) pairs: the device twin of `format.fnv1a64_u64_stride`.
+    Bytes past block_len are zeroed and the word count is
+    ceil(block_len / 8), so the digest matches the host recurrence over
+    the exact block payload; the recurrence runs as one lax.scan over
+    the word axis, vectorized across the row batch."""
+    B, S = rows.shape
+    i = jnp.arange(S, dtype=jnp.int32)
+    masked = jnp.where(i[None, :] < block_len[:, None], rows, 0)
+    pad = (-S) % 8
+    if pad:
+        masked = jnp.pad(masked, ((0, 0), (0, pad)))
+    g = masked.reshape(B, -1, 8).astype(jnp.uint32)
+    w_lo = g[..., 0] | (g[..., 1] << 8) | (g[..., 2] << 16) | (g[..., 3] << 24)
+    w_hi = g[..., 4] | (g[..., 5] << 8) | (g[..., 6] << 16) | (g[..., 7] << 24)
+    n_words = (block_len.astype(jnp.int32) + 7) // 8
+
+    def step(carry, xs):
+        hi, lo = carry
+        whi, wlo, t = xs
+        nhi, nlo = _fnv_mul_u32(hi ^ whi, lo ^ wlo)
+        live = t < n_words
+        return (jnp.where(live, nhi, hi), jnp.where(live, nlo, lo)), None
+
+    off = int(FNV_OFFSET)
+    init = (jnp.full((B,), off >> 32, jnp.uint32),
+            jnp.full((B,), off & 0xFFFFFFFF, jnp.uint32))
+    W = w_lo.shape[1]
+    (fhi, flo), _ = jax.lax.scan(
+        step, init, (w_hi.T, w_lo.T, jnp.arange(W, dtype=jnp.int32)))
+    return fhi, flo
+
+
+_fnv_rows_jit = jax.jit(_fnv_rows_core)
 
 
 class Decoder:
@@ -318,7 +389,28 @@ class Decoder:
                 da.t_max_cmd, da.mode, da.entropy, da.offset_bytes, total,
                 self._freqs_host)
 
-    def decode_blocks(self, sel) -> jnp.ndarray:
+    def verify_rows(self, sel, rows: jnp.ndarray) -> None:
+        """Recompute each decoded row's 8-byte-stride FNV-1a-64 on device
+        and compare against the archive's `block_fnv` table; raises
+        `BlockDigestError` naming the first mismatching block."""
+        sel = np.asarray(sel).reshape(-1)
+        if sel.size == 0:
+            return
+        fhi, flo = _fnv_rows_jit(
+            rows, jnp.asarray(self.archive.block_len[sel]))
+        got = ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
+               | np.asarray(flo).astype(np.uint64))
+        want = self.archive.block_fnv[sel]
+        bad = np.flatnonzero(got != want)
+        if bad.size:
+            b = int(sel[bad[0]])
+            raise BlockDigestError(
+                f"block {b} digest mismatch: decoded "
+                f"{int(got[bad[0]]):#018x} != stored "
+                f"{int(want[bad[0]]):#018x} "
+                f"({bad.size} of {sel.size} selected blocks corrupt)")
+
+    def decode_blocks(self, sel, verify: bool = False) -> jnp.ndarray:
         sel = jnp.asarray(sel, jnp.int32)
         if self.da.mode == "global":
             # wavefront decode is whole-prefix by construction
@@ -327,11 +419,16 @@ class Decoder:
                                               dtype=jnp.int32),
                                    self._meta(self.da.n_blocks), self.backend)
             rows = flat.reshape(self.da.n_blocks, self.da.block_size)
-            return rows[sel]
-        return _decode_sel_jit(self.arrays, sel, self._meta(len(sel)),
-                               self.backend)
+            out = rows[sel]
+        else:
+            out = _decode_sel_jit(self.arrays, sel, self._meta(len(sel)),
+                                  self.backend)
+        if verify:
+            self.verify_rows(np.asarray(sel), out)
+        return out
 
-    def decode_blocks_host_entropy(self, sel) -> jnp.ndarray:
+    def decode_blocks_host_entropy(self, sel, verify: bool = False
+                                   ) -> jnp.ndarray:
         """Mode 1: host entropy + device match."""
         from repro.kernels import ops
         sel = np.asarray(sel)
@@ -345,7 +442,9 @@ class Decoder:
             a.block_size, int(a.n_cmds.max(initial=1)), self.backend,
             a.offset_bytes, total)
         if a.mode == "global":
-            return out.reshape(a.n_blocks, a.block_size)[sel]
+            out = out.reshape(a.n_blocks, a.block_size)[sel]
+        if verify:
+            self.verify_rows(sel, out)
         return out
 
     # ------------------------------------------------------------ host APIs
@@ -359,15 +458,36 @@ class Decoder:
         return np.asarray(rows[0])[:int(lens[0])]
 
     def decode_all(self, chunk_blocks: Optional[int] = None,
-                   mode2: bool = True) -> np.ndarray:
+                   mode2: bool = True, verify: bool = False) -> np.ndarray:
         """Whole-file decode; with chunk_blocks set, never materializes more
         than one chunk of decompressed output at a time (paper §5 v7-RA).
-        Compatibility shim over `StreamingExecutor`."""
-        from repro.api.address import ByteRange
-        from repro.api.executors import StreamingExecutor
+        Compatibility shim over `StreamingExecutor`.
+
+        verify=True additionally checks `file_fnv` over the block digest
+        table, then decodes block-selection-wise with per-block device
+        digest verification (`BlockDigestError` on the first mismatch)."""
         raw = self.da.raw_size
         if raw == 0:
             return np.zeros(0, np.uint8)
+        if verify:
+            a = self.archive
+            if file_digest(a.block_fnv) != a.file_fnv:
+                raise BlockDigestError(
+                    f"file digest mismatch: block digest table folds to "
+                    f"{file_digest(a.block_fnv):#018x} != stored "
+                    f"{a.file_fnv:#018x}")
+            decode = (self.decode_blocks if mode2
+                      else self.decode_blocks_host_entropy)
+            step = int(chunk_blocks or self.da.n_blocks)
+            parts = []
+            for lo in range(0, self.da.n_blocks, step):
+                sel = np.arange(lo, min(lo + step, self.da.n_blocks))
+                rows = np.asarray(decode(sel, verify=True))
+                parts.extend(rows[i, :int(a.block_len[b])]
+                             for i, b in enumerate(sel))
+            return np.concatenate(parts) if parts else np.zeros(0, np.uint8)
+        from repro.api.address import ByteRange
+        from repro.api.executors import StreamingExecutor
         ex = StreamingExecutor(
             self._api_store(),
             max_blocks_per_chunk=chunk_blocks or self.da.n_blocks,

@@ -15,24 +15,19 @@ from repro.core import entropy as ent
 from repro.core import match_search as ms
 from repro.core.format import (DEFAULT_BLOCK_SIZE, MAX_LEN, N_STREAMS,
                                S_COMMANDS, S_LENGTHS, S_LITERALS, S_OFFSETS,
-                               Archive, fnv1a64_u64_stride)
-
-_FNV_OFFSET = 0xCBF29CE484222325
-_FNV_PRIME = 0x100000001B3
-_U64 = (1 << 64) - 1
-
-
-def _file_digest(block_fnv: np.ndarray) -> int:
-    h = _FNV_OFFSET
-    for d in block_fnv.tolist():
-        h = ((h ^ int(d)) * _FNV_PRIME) & _U64
-    return h
+                               Archive, file_digest, fnv1a64_u64_stride)
 
 
 def _planes_u16(vals: np.ndarray) -> np.ndarray:
     v = vals.astype(np.uint32)
     return np.concatenate([(v & 0xFF).astype(np.uint8),
                            (v >> 8).astype(np.uint8)])
+
+
+def _planes_u32(vals: np.ndarray) -> np.ndarray:
+    v = vals.astype(np.uint32)
+    return np.concatenate([((v >> np.uint32(8 * b)) & np.uint32(0xFF))
+                           .astype(np.uint8) for b in range(4)])
 
 
 def _planes_u64(vals: np.ndarray) -> np.ndarray:
@@ -50,6 +45,15 @@ def encode(data: bytes | np.ndarray,
     data = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray)) \
         else np.ascontiguousarray(data, np.uint8)
     n = data.shape[0]
+    # "ra" offsets are block-local; two planes hold them only while the
+    # block fits 16 bits. Larger blocks (e.g. PAPER1_BLOCK_SIZE) switch to
+    # four planes — storing a >=64 KiB offset in two would silently
+    # truncate it and corrupt every match past the 16-bit horizon.
+    if mode == "ra":
+        offset_bytes = 2 if block_size <= 0xFFFF else 4
+        _ra_planes = _planes_u16 if offset_bytes == 2 else _planes_u32
+    else:
+        offset_bytes = 8
     n_blocks = max(1, -(-n // block_size))
     block_start = (np.arange(n_blocks, dtype=np.int64) * block_size)
     block_len = np.minimum(n - block_start, block_size).astype(np.int32)
@@ -113,7 +117,7 @@ def encode(data: bytes | np.ndarray,
         class_ids.append(S_LITERALS)
         streams.append(_planes_u16(ml_a))
         class_ids.append(S_LENGTHS)
-        streams.append(_planes_u16(of_a) if mode == "ra" else _planes_u64(of_a))
+        streams.append(_ra_planes(of_a) if mode == "ra" else _planes_u64(of_a))
         class_ids.append(S_OFFSETS)
         streams.append(_planes_u16(ll_a))
         class_ids.append(S_COMMANDS)
@@ -162,6 +166,6 @@ def encode(data: bytes | np.ndarray,
         block_start=block_start,
         block_len=block_len,
         block_fnv=block_fnv,
-        file_fnv=_file_digest(block_fnv),
-        offset_bytes=2 if mode == "ra" else 8,
+        file_fnv=file_digest(block_fnv),
+        offset_bytes=offset_bytes,
     )

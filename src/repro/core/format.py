@@ -83,6 +83,17 @@ def fnv1a64_u64_stride(data: np.ndarray) -> int:
     return h
 
 
+def file_digest(block_fnv: np.ndarray) -> int:
+    """Archive-level digest: the FNV-1a-64 recurrence folded over the
+    per-block digests (what `Archive.file_fnv` stores)."""
+    h = int(FNV_OFFSET)
+    prime = int(FNV_PRIME)
+    mask = (1 << 64) - 1
+    for d in np.asarray(block_fnv, np.uint64).tolist():
+        h = ((h ^ int(d)) * prime) & mask
+    return h
+
+
 def lanes_for(n_syms: int, k_max: int = MAX_LANES) -> int:
     """Adaptive interleave factor: small streams get few lanes so the K
     initial states (4·K bytes) do not dominate the compressed size."""

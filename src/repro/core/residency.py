@@ -17,21 +17,22 @@ ONE pipeline:
 
 entirely on device. `fetch_read` (single read) and `fetch_records`
 (fixed-size records, the training input path) are thin views over the same
-pipeline. An optional decoded-block LRU cache makes hot blocks skip
-re-decode across calls; the gather stage stays jitted either way.
+pipeline. An optional decoded-block cache (`repro.api.cache.BlockCache`:
+a preallocated device buffer + CachePlan hit/miss split, pluggable
+LRU/frequency/pin-range policies) makes hot blocks skip re-decode across
+calls; the gather stage stays jitted either way.
 
 Since the query-plane redesign, `fetch_reads`/`fetch_records` are
 compatibility shims over `repro.api` (QueryPlanner → DeviceExecutor): the
 covering-block math lives in `repro.api.plan`, and this module keeps the
 jitted device cores (`_fetch_reads_core`, `_fetch_dev_core`,
-`_gather_reads_core`) plus the decoded-block LRU the executors reuse.
+`_gather_reads_core`) plus the block-cache hookup the executors reuse.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -127,35 +128,48 @@ _fetch_dev_jit = partial(jax.jit,
                              _fetch_dev_core)
 
 
-def _pad_pow2(ids: np.ndarray) -> np.ndarray:
+def _pad_pow2(ids: np.ndarray, fill=None) -> np.ndarray:
     """Pad a request batch to the next power of two (bounded jit variants);
-    pad slots repeat the last id so they add no unique blocks."""
+    pad slots repeat the last element — so they add no unique blocks —
+    unless an explicit `fill` is given (e.g. an out-of-range sentinel)."""
     n = ids.size
     cap = 1 << max(0, n - 1).bit_length() if n > 1 else 1
     if cap == n:
         return ids
-    return np.concatenate([ids, np.full(cap - n, ids[-1], ids.dtype)])
+    return np.concatenate(
+        [ids, np.full(cap - n, ids[-1] if fill is None else fill,
+                      ids.dtype)])
 
 
 class CompressedResidentStore:
     """Archive + index resident on device; decode-on-demand reads.
 
-    cache_blocks > 0 enables a decoded-block LRU: hot blocks skip
-    re-decode across fetch calls (serving working sets are Zipfian; the
-    cache bounds decode work to the cold tail). Mode 1 fetches
-    (`mode2=False`: host entropy decode, device match resolution) always
-    run through the staged path since their entropy stage lives on host.
+    cache_blocks > 0 enables the device-resident decoded-block cache
+    (`repro.api.cache.BlockCache`): hot blocks skip re-decode across
+    fetch calls (serving working sets are Zipfian; the cache bounds
+    decode work to the cold tail), misses decode in one pow2-padded
+    launch, and a single jitted scatter/gather installs/assembles rows —
+    decoded bytes never leave the device. `cache_policy` selects
+    eviction/admission: "lru", "freq" (frequency-aware admission), or
+    any `EvictionPolicy` instance (e.g. `PinRangePolicy`). Mode 1
+    fetches (`mode2=False`: host entropy decode, device match
+    resolution) always run through the staged path since their entropy
+    stage lives on host.
     """
 
     def __init__(self, archive: Archive, index: Optional[ReadIndex] = None,
-                 backend: str = "auto", cache_blocks: int = 0):
+                 backend: str = "auto", cache_blocks: int = 0,
+                 cache_policy: Union[str, object] = "lru"):
         self.decoder = Decoder(archive, backend=backend)
         self.index = index
         self.block_size = archive.block_size
         self._cache_cap = int(cache_blocks)
-        self._cache: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
-        self.cache_hits = 0
-        self.cache_misses = 0
+        if self._cache_cap > 0:
+            from repro.api.cache import BlockCache
+            self._cache = BlockCache(self._cache_cap, self.block_size,
+                                     archive.n_blocks, policy=cache_policy)
+        else:
+            self._cache = None
         if index is not None:
             blk, rem = split_starts(index.starts, self.block_size)
             self._starts_blk = jnp.asarray(blk)       # i32[n_reads + 1]
@@ -189,36 +203,35 @@ class CompressedResidentStore:
             n_blocks=self.decoder.da.n_blocks,
         )
 
+    @property
+    def cache_hits(self) -> int:
+        return self._cache.hits if self._cache is not None else 0
+
+    @property
+    def cache_misses(self) -> int:
+        return self._cache.misses if self._cache is not None else 0
+
     def cache_info(self) -> dict:
-        return {"capacity": self._cache_cap, "resident": len(self._cache),
-                "hits": self.cache_hits, "misses": self.cache_misses}
+        if self._cache is None:
+            # same keys as BlockCache.info(), all zeroed — callers can
+            # read counters without checking whether the cache is on
+            return {"capacity": 0, "resident": 0, "hits": 0, "misses": 0,
+                    "evictions": 0, "installs": 0, "bytes_resident": 0,
+                    "buffer_bytes": 0, "decode_launches": 0,
+                    "policy": "off"}
+        return self._cache.info()
 
     # ------------------------------------------------------------ internals
     def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
         """(U,) unique block ids → (U, block_size) decoded rows, through the
-        LRU when enabled."""
+        device-resident block cache when enabled."""
         decode = (self.decoder.decode_blocks if mode2
                   else self.decoder.decode_blocks_host_entropy)
-        if self._cache_cap == 0:
+        if self._cache is None:
             # pad the selection to a power of two so random batches don't
             # retrace the decode kernels for every distinct unique count
             return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
-        cache = self._cache
-        missing = [int(b) for b in uniq if int(b) not in cache]
-        if missing:
-            self.cache_misses += len(missing)
-            rows = decode(_pad_pow2(np.asarray(missing, np.int32)))
-            for i, b in enumerate(missing):
-                cache[b] = rows[i]
-        self.cache_hits += len(uniq) - len(missing)
-        for b in uniq:
-            cache.move_to_end(int(b))
-        out = jnp.stack([cache[int(b)] for b in uniq])
-        # evict AFTER assembling: a single call may need more blocks than
-        # the capacity, and those must all be live until gathered
-        while len(cache) > self._cache_cap:
-            cache.popitem(last=False)
-        return out
+        return self._cache.rows_for(uniq, decode)
 
     # -------------------------------------------------------------- lookups
     def fetch_reads(self, ids: Sequence[int], mode2: bool = True
@@ -243,10 +256,29 @@ class CompressedResidentStore:
         out, lens = self.fetch_reads(np.array([r], np.int64), mode2=mode2)
         return np.asarray(out[0])[:int(lens[0])]
 
-    def fetch_block_range(self, b0: int, b1: int) -> jnp.ndarray:
-        """Position-invariant block-range decode (stays on device)."""
-        sel = np.arange(b0, b1)
-        return self.decoder.decode_blocks(sel)
+    def fetch_block_range(self, b0: int, b1: int, mode2: bool = True
+                          ) -> jnp.ndarray:
+        """Position-invariant block-range decode (stays on device): (b1-b0,
+        block_size) u8 rows, tail bytes of a partial final block zeroed.
+
+        Routed through the query plane like every other entry point — one
+        block-aligned span plan — so ranges ride the block cache when
+        enabled and the pow2-padded lowering keeps distinct range lengths
+        from retracing the decode kernels (the old direct
+        `decoder.decode_blocks(arange)` call did neither)."""
+        n_blocks = self.decoder.da.n_blocks
+        if not 0 <= b0 <= b1 <= n_blocks:
+            raise IndexError(
+                f"block range [{b0}, {b1}) outside [0, {n_blocks})")
+        if b0 == b1:
+            return jnp.zeros((0, self.block_size), jnp.uint8)
+        a = self.decoder.archive
+        planner, executor = self._api()
+        plan = planner.plan_spans(a.block_start[b0:b1],
+                                  a.block_len[b0:b1].astype(np.int64),
+                                  max_len=self.block_size)
+        rows, _ = executor.run(plan, mode2=mode2)
+        return rows
 
     def fetch_records(self, ids: Sequence[int], record_bytes: int,
                       mode2: bool = True) -> jnp.ndarray:

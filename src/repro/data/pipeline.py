@@ -32,8 +32,9 @@ class PipelineConfig:
     block_size: int = 16 * 1024
     entropy: str = "rans"
     seed: int = 0
-    cache_blocks: int = 0     # decoded-block LRU capacity (0 = off); hot
-                              # blocks skip re-decode across batches
+    cache_blocks: int = 0     # decoded-block cache capacity (0 = off);
+                              # hot blocks skip re-decode across batches
+    cache_policy: str = "lru"  # "lru" | "freq" | EvictionPolicy instance
 
 
 class CompressedResidentDataLoader:
@@ -48,7 +49,7 @@ class CompressedResidentDataLoader:
         self.archive = GenomicArchive.from_records(
             corpus, record_bytes=rec, block_size=cfg.block_size,
             entropy=cfg.entropy, backend=backend,
-            cache_blocks=cfg.cache_blocks)
+            cache_blocks=cfg.cache_blocks, cache_policy=cfg.cache_policy)
         self.store = self.archive.store
         self.n_records = self.archive.n_reads
         self.record_bytes = rec

@@ -30,7 +30,10 @@ def main():
     ap.add_argument("--ctx-bytes", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-blocks", type=int, default=64,
-                    help="decoded-block LRU capacity (0 disables)")
+                    help="decoded-block cache capacity (0 disables)")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=("lru", "freq"),
+                    help="block cache eviction/admission policy")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -42,7 +45,8 @@ def main():
 
     corpus = make_fastq("platinum", n_reads=3000, seed=0)
     ga = GenomicArchive.from_bytes(corpus, block_size=16 * 1024,
-                                   cache_blocks=args.cache_blocks)
+                                   cache_blocks=args.cache_blocks,
+                                   cache_policy=args.cache_policy)
     st = ga.stats()
     print(f"resident: {st.compressed_device_bytes:,}B compressed of "
           f"{st.raw_size:,}B ({st.residency_fraction_of_raw:.1%}), "

@@ -43,6 +43,12 @@ class ReadBatcher:
     UNIQUE reads (one total when the deduped queue fits the batch).
     Tickets map onto unique batch rows: duplicate ids anywhere in a flush
     decode once, regardless of how the queue slices into batches.
+
+    With the store's decoded-block cache enabled (`cache_blocks > 0`),
+    each flush rides the cached DecodePlan path: the covering set splits
+    into resident hits and ONE pow2-padded miss decode — zero per-block
+    host dispatches, and the hot Zipfian head stays device-resident
+    across flushes (`cache_info()` shows the counters).
     """
 
     def __init__(self, store, max_batch: int = 256):
@@ -68,6 +74,10 @@ class ReadBatcher:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def cache_info(self) -> dict:
+        """The store's decoded-block cache counters (zeros when off)."""
+        return self.store.cache_info()
 
     def flush(self, mode2: bool = True) -> Dict[int, np.ndarray]:
         """→ {ticket: read bytes (u8, exact length)} for all queued

@@ -1,0 +1,242 @@
+"""Device-resident block cache: CachePlan split, pluggable policies,
+one-launch miss decode, and the entry points that ride it."""
+import numpy as np
+import pytest
+
+from repro.api.cache import (BlockCache, FrequencyPolicy, LRUPolicy,
+                             PinRangePolicy, make_policy)
+from repro.api.plan import CachePlan, split_cache_hits
+from repro.core import encoder as enc
+from repro.core.index import ReadIndex
+from repro.core.residency import CompressedResidentStore
+from repro.serving.serve_step import ReadBatcher
+
+BS = 4096
+
+
+@pytest.fixture(scope="module")
+def corpus(fastq_platinum):
+    a = enc.encode(fastq_platinum, block_size=BS)
+    idx = ReadIndex.build(fastq_platinum, BS)
+    return a, idx, np.frombuffer(fastq_platinum, np.uint8)
+
+
+def _store(corpus, **kw):
+    a, idx, _ = corpus
+    return CompressedResidentStore(a, idx, backend="ref", **kw)
+
+
+def _zipf_ids(rng, n, size, s=1.1):
+    p = 1.0 / np.arange(1, n + 1) ** s
+    return rng.choice(n, size=size, p=p / p.sum())
+
+
+# ------------------------------------------------------------- CachePlan
+def test_cache_plan_split_vectorized(corpus):
+    a, _, _ = corpus
+    cache = BlockCache(4, BS, a.n_blocks)
+    cp = cache.plan(np.array([3, 7, 9]))
+    assert isinstance(cp, CachePlan)
+    assert cp.n_hits == 0 and cp.n_misses == 3 and cp.n_installed == 3
+    assert cp.miss_blocks.tolist() == [3, 7, 9]
+    assert np.all(cp.src_is_miss)
+    # second plan over an overlapping set: residents split out as hits
+    cp2 = cache.plan(np.array([7, 9, 11]))
+    assert cp2.n_hits == 2 and cp2.n_misses == 1
+    assert cp2.miss_blocks.tolist() == [11]
+    hit_mask, slots = split_cache_hits(np.array([3, 5]), cache.slot_of)
+    assert hit_mask.tolist() == [True, False] and slots[0] >= 0
+
+
+def test_cache_plan_capacity_overflow_decodes_without_install(corpus):
+    """A request needing more blocks than capacity still decodes them all;
+    only `capacity` rows install, and nothing the request reads is
+    evicted mid-flight."""
+    a, _, _ = corpus
+    cache = BlockCache(2, BS, a.n_blocks)
+    cp = cache.plan(np.arange(6))
+    assert cp.n_misses == 6 and cp.n_installed == 2
+    assert int((cp.install_slots < cache.capacity).sum()) == 2
+    assert cache.resident == 2
+
+
+# --------------------------------------------------------------- policies
+def test_lru_evicts_least_recent(corpus):
+    a, _, _ = corpus
+    cache = BlockCache(2, BS, a.n_blocks, policy="lru")
+    cache.plan(np.array([0]))
+    cache.plan(np.array([1]))
+    cache.plan(np.array([0]))          # refresh 0 → 1 is now LRU
+    cp = cache.plan(np.array([2]))
+    assert cp.n_evicted == 1
+    assert cache.slot_of[1] < 0 and cache.slot_of[0] >= 0
+
+
+def test_frequency_policy_blocks_one_hit_wonders(corpus):
+    """admit_after=2: a block is admitted on its second sighting; single-
+    shot scans never claim a slot, so the hot set stays resident."""
+    a, _, _ = corpus
+    cache = BlockCache(2, BS, a.n_blocks, policy=FrequencyPolicy(2))
+    cache.plan(np.array([0]))
+    assert cache.resident == 0         # first sighting: not admitted
+    cache.plan(np.array([0]))
+    assert cache.slot_of[0] >= 0       # second sighting: resident
+    cache.plan(np.array([0]))
+    assert cache.plan(np.array([0])).n_hits == 1
+    # a parade of one-hit wonders cannot evict the hot block
+    for b in range(5, 15):
+        cache.plan(np.array([0, b]))
+    assert cache.slot_of[0] >= 0
+
+
+def test_pin_range_policy_immune_to_eviction(corpus):
+    a, _, _ = corpus
+    cache = BlockCache(2, BS, a.n_blocks, policy=PinRangePolicy(0, 1))
+    cache.plan(np.array([0]))          # pinned: admitted on first sight
+    assert cache.slot_of[0] >= 0
+    for b in range(1, 8):              # churn through the other slot
+        cache.plan(np.array([b]))
+    assert cache.slot_of[0] >= 0, "pinned block was evicted"
+    with pytest.raises(ValueError, match="inverted"):
+        PinRangePolicy(5, 3)
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown cache policy"):
+        make_policy("mru")
+    assert isinstance(make_policy("freq"), FrequencyPolicy)
+    p = LRUPolicy()
+    assert make_policy(p) is p
+
+
+# ------------------------------------------------- one-launch miss decode
+def test_cached_fetch_is_one_decode_launch_per_miss_set(corpus):
+    """Acceptance: a cached fetch issues ZERO per-block host dispatches —
+    exactly one decode launch for the whole miss set, none when the
+    working set is resident."""
+    a, idx, ref = corpus
+    s = _store(corpus, cache_blocks=a.n_blocks)
+    calls = []
+    inner = s.decoder.decode_blocks
+    s.decoder.decode_blocks = lambda sel, **kw: (calls.append(len(sel)),
+                                                 inner(sel, **kw))[1]
+    rng = np.random.default_rng(7)
+    ids = _zipf_ids(rng, idx.n_reads, 64)
+    s.fetch_reads(ids)
+    assert len(calls) == 1, f"expected ONE miss-set launch, got {calls}"
+    s.fetch_reads(ids)                 # fully resident: zero launches
+    assert len(calls) == 1
+    more = _zipf_ids(rng, idx.n_reads, 64)
+    s.fetch_reads(more)                # new tail blocks: one more launch
+    assert len(calls) <= 2
+    assert s.cache_info()["decode_launches"] == len(calls)
+
+
+def test_cached_zipfian_serving_bit_perfect_all_policies(corpus):
+    """Zipfian workload through fetch_reads/ReadBatcher: every policy and
+    capacity regime returns bytes identical to the uncached store."""
+    a, idx, ref = corpus
+    plain = _store(corpus)
+    rng = np.random.default_rng(11)
+    batches = [_zipf_ids(rng, idx.n_reads, 48) for _ in range(4)]
+    wants = [np.asarray(plain.fetch_reads(b)[0]) for b in batches]
+    for cap in (3, 16, a.n_blocks):
+        for policy in ("lru", "freq", PinRangePolicy(0, 2)):
+            s = _store(corpus, cache_blocks=cap, cache_policy=policy)
+            for b, want in zip(batches, wants):
+                got = np.asarray(s.fetch_reads(b)[0])
+                np.testing.assert_array_equal(got, want)
+            info = s.cache_info()
+            assert info["resident"] <= cap
+            assert info["bytes_resident"] == info["resident"] * BS
+    # serving loop: flushes ride the same cached plan path
+    s = _store(corpus, cache_blocks=16)
+    batcher = ReadBatcher(s)
+    ids = _zipf_ids(rng, idx.n_reads, 40)
+    tickets = [batcher.submit(int(r)) for r in ids]
+    got = batcher.flush()
+    for t, r in zip(tickets, ids):
+        lo, hi, _ = idx.lookup(int(r))
+        np.testing.assert_array_equal(got[t], ref[lo:hi])
+    assert batcher.cache_info()["installs"] > 0
+
+
+def test_failed_decode_does_not_poison_cache(corpus):
+    """Regression: plan() registers miss blocks before realize() decodes
+    them — if the decode launch dies, those slots must not be served as
+    zero-byte 'hits' on retry. The cache resets instead."""
+    a, idx, _ = corpus
+    s = _store(corpus, cache_blocks=a.n_blocks)
+    plain = _store(corpus)
+    ids = np.arange(0, idx.n_reads, 29)
+    want = np.asarray(plain.fetch_reads(ids)[0])
+    boom = {"on": True}
+    inner = s.decoder.decode_blocks
+
+    def flaky(sel, **kw):
+        if boom["on"]:
+            raise RuntimeError("device lost")
+        return inner(sel, **kw)
+
+    s.decoder.decode_blocks = flaky
+    with pytest.raises(RuntimeError, match="device lost"):
+        s.fetch_reads(ids)
+    assert s.cache_info()["resident"] == 0     # nothing falsely resident
+    boom["on"] = False
+    got = np.asarray(s.fetch_reads(ids)[0])    # retry: real bytes, no zeros
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cache_info_same_keys_enabled_and_disabled(corpus):
+    """The documented contract: disabled caches report the same counter
+    keys, zeroed — monitoring code never needs a feature check."""
+    on = _store(corpus, cache_blocks=4).cache_info()
+    off = _store(corpus).cache_info()
+    assert set(on) == set(off)
+    assert off["capacity"] == 0 and off["bytes_resident"] == 0
+    assert off["policy"] == "off"
+
+
+def test_cache_hit_rate_grows_on_zipfian_reuse(corpus):
+    a, idx, _ = corpus
+    s = _store(corpus, cache_blocks=a.n_blocks)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        s.fetch_reads(_zipf_ids(rng, idx.n_reads, 64))
+    info = s.cache_info()
+    assert info["hits"] > info["misses"], info
+
+
+# ------------------------------------------------------ fetch_block_range
+def test_fetch_block_range_rides_plan_and_cache(corpus):
+    """Regression (cache bypass + per-length retrace): block ranges lower
+    through the query plane — cached rows, pow2-padded geometry, and
+    bit-perfect payloads with zeroed tail padding."""
+    a, idx, ref = corpus
+    s = _store(corpus, cache_blocks=a.n_blocks)
+    rows = np.asarray(s.fetch_block_range(0, a.n_blocks))
+    assert rows.shape == (a.n_blocks, BS)
+    for b in range(a.n_blocks):
+        lo, ln = int(a.block_start[b]), int(a.block_len[b])
+        np.testing.assert_array_equal(rows[b, :ln], ref[lo:lo + ln])
+        assert not rows[b, ln:].any()          # tail is zero, not garbage
+    assert s.cache_info()["installs"] > 0      # the range warmed the cache
+    hits_before = s.cache_info()["hits"]
+    sub = np.asarray(s.fetch_block_range(2, 5))
+    np.testing.assert_array_equal(sub, rows[2:5])
+    assert s.cache_info()["hits"] > hits_before
+    # mode 1 agrees
+    np.testing.assert_array_equal(
+        np.asarray(s.fetch_block_range(2, 5, mode2=False)), rows[2:5])
+    with pytest.raises(IndexError, match="block range"):
+        s.fetch_block_range(0, a.n_blocks + 1)
+    assert s.fetch_block_range(3, 3).shape == (0, BS)
+
+
+def test_uncached_fetch_block_range_matches_decoder(corpus):
+    a, idx, ref = corpus
+    s = _store(corpus)
+    rows = np.asarray(s.fetch_block_range(1, 4))
+    for i, b in enumerate(range(1, 4)):
+        lo, ln = int(a.block_start[b]), int(a.block_len[b])
+        np.testing.assert_array_equal(rows[i, :ln], ref[lo:lo + ln])

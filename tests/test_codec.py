@@ -91,6 +91,112 @@ def test_64bit_offsets():
     assert b.block_start.dtype == np.int64
 
 
+def _far_match_payload(seed: int, unit_len: int, gap: int) -> bytes:
+    """unit + gap + unit: any correct parse of the second copy needs a
+    match whose source lies `unit_len + gap` bytes back — past the 16-bit
+    offset horizon when that distance exceeds 0xFFFF."""
+    rng = np.random.default_rng(seed)
+    unit = rng.integers(0, 256, size=unit_len, dtype=np.uint8).tobytes()
+    return unit + bytes(gap) + unit
+
+
+def test_ra_large_block_offset_truncation_regression():
+    """Regression (silent u16 truncation): encode(mode="ra") stored
+    block-local offsets as two byte planes while PAPER1_BLOCK_SIZE is
+    1 MiB — any match sourcing ≥64 KiB into a block corrupted silently.
+    Large blocks must select the 4-plane path and roundtrip bit-perfect."""
+    data = _far_match_payload(0, 70_000, 5_000)
+    a = enc.encode(data, block_size=fmt.PAPER1_BLOCK_SIZE, mode="ra")
+    assert a.offset_bytes == 4            # the 4-byte offset-plane path
+    # prove the payload actually exercises the >16-bit offset regime
+    streams = dec._entropy_decode_host(a, np.array([0]))
+    planes = np.asarray(streams["offsets"])[0]
+    nc = int(a.n_cmds[0])
+    offs = sum(planes[b * nc:(b + 1) * nc].astype(np.int64) << (8 * b)
+               for b in range(4))
+    assert (offs > 0xFFFF).any(), "no match beyond the u16 horizon"
+    out = dec.Decoder(a, backend="ref").decode_all()
+    assert np.array_equal(out, np.frombuffer(data, np.uint8))
+    # the serialized form carries the width and roundtrips it
+    b = fmt.deserialize(fmt.serialize(a))
+    assert b.offset_bytes == 4
+    assert np.array_equal(dec.Decoder(b, backend="ref").decode_all(), out)
+
+
+def test_small_block_keeps_two_offset_planes(fastq_platinum):
+    """block_size <= 0xFFFF stays on the compact 2-plane path."""
+    a = enc.encode(fastq_platinum[:30_000], block_size=4096, mode="ra")
+    assert a.offset_bytes == 2
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       unit_len=st.integers(1_000, 80_000),
+       gap=st.integers(0, 40_000),
+       block_size=st.sampled_from([16 * 1024, 64 * 1024,
+                                   fmt.PAPER1_BLOCK_SIZE]),
+       mode=st.sampled_from(["ra", "global"]),
+       entropy=st.sampled_from(["rans", "raw"]))
+def test_roundtrip_blocksize_mode_entropy_sweep(seed, unit_len, gap,
+                                                block_size, mode, entropy):
+    """The grid that would have caught the u16 truncation at seed time:
+    block_size ∈ {16 KiB, 64 KiB, 1 MiB} × mode × entropy, on payloads
+    with match distances up to ~120 KiB (far past the u16 horizon)."""
+    data = _far_match_payload(seed, unit_len, gap)
+    assert roundtrip(data, block_size=block_size, mode=mode,
+                     entropy=entropy), (block_size, mode, entropy)
+
+
+def test_verify_clean_and_corrupted(fastq_platinum):
+    """verify=True recomputes the 8-byte-stride FNV per decoded block on
+    device: clean archives pass, a single corrupted entropy word raises
+    BlockDigestError naming the block, in both modes."""
+    data = fastq_platinum[:40_000]
+    ref = np.frombuffer(data, np.uint8)
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    sel = np.arange(a.n_blocks)
+    assert np.array_equal(
+        np.asarray(d.decode_blocks(sel, verify=True)).reshape(-1)[:len(ref)],
+        ref)
+    assert np.array_equal(d.decode_all(verify=True), ref)
+    assert np.array_equal(d.decode_all(chunk_blocks=3, verify=True), ref)
+    d.decode_blocks_host_entropy(sel, verify=True)
+
+    bad = enc.encode(data, block_size=4096)
+    bad.words = bad.words.copy()
+    bad.words[int(bad.word_off[2, fmt.S_LITERALS]) + 3] ^= 0xA5
+    db = dec.Decoder(bad, backend="ref")
+    assert np.array_equal(np.asarray(db.decode_blocks(np.array([0]),
+                                                      verify=True))[0, :4096],
+                          ref[:4096])          # untouched blocks still pass
+    with pytest.raises(dec.BlockDigestError, match="block 2"):
+        db.decode_blocks(sel, verify=True)
+    with pytest.raises(dec.BlockDigestError, match="block 2"):
+        db.decode_all(verify=True)
+    with pytest.raises(dec.BlockDigestError, match="block 2"):
+        db.decode_blocks_host_entropy(np.array([2]), verify=True)
+    # a tampered digest table is caught by the file-level fold
+    bad2 = enc.encode(data, block_size=4096)
+    bad2.block_fnv = bad2.block_fnv.copy()
+    bad2.block_fnv[0] ^= np.uint64(1)
+    with pytest.raises(dec.BlockDigestError, match="file digest"):
+        dec.Decoder(bad2, backend="ref").decode_all(verify=True)
+
+
+def test_device_fnv_matches_host_recurrence(rng):
+    """The u32-limb lax.scan digest == format.fnv1a64_u64_stride for
+    ragged row lengths (incl. non-multiple-of-8 and zero)."""
+    import jax.numpy as jnp
+    rows = rng.integers(0, 256, size=(5, 133), dtype=np.uint8)
+    lens = np.array([0, 1, 8, 100, 133], np.int32)
+    fhi, flo = dec._fnv_rows_jit(jnp.asarray(rows), jnp.asarray(lens))
+    got = ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
+           | np.asarray(flo).astype(np.uint64))
+    want = [fmt.fnv1a64_u64_stride(rows[i, :n]) for i, n in enumerate(lens)]
+    assert got.tolist() == [int(w) for w in want]
+
+
 def test_fnv_digests(fastq_platinum):
     data = fastq_platinum[:20_000]
     a = enc.encode(data, block_size=4096)

@@ -149,9 +149,16 @@ def test_stream_facade_mixed_addresses_in_order(ga):
     lo9, hi9 = _span(ga_, 9)
     addrs = [ReadId(3), ByteRange(10, 5000), Region(b"SRR0.9")]
     want = np.concatenate([ref[lo3:hi3], ref[10:5000], ref[lo9:hi9]])
-    got = np.concatenate(list(ga_.stream(addrs,
-                                         max_resident_bytes=4 * BS)))
+    budget = 4 * BS
+    ex = StreamingExecutor(ga_.store, max_resident_bytes=budget,
+                           planner=ga_.planner)
+    got = np.concatenate(list(ex.chunks(addrs)))
     np.testing.assert_array_equal(got, want)
+    # every chunk honors the budget with the pow2-padded gather output
+    # (what plan_spans actually materializes) counted in
+    for st in ex.chunk_log:
+        assert st.resident_bytes <= budget, st
+        assert st.gather_bytes >= st.n_spans * 1   # padded batch costed
 
 
 def test_stream_budget_accounts_for_pow2_batch_padding(ga):
