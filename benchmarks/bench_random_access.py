@@ -44,6 +44,34 @@ def main(small: bool = False):
         f"dispatch_floor={floor*1e6:.0f}us;marginal={marginal*1e6:.0f}"
         f"us/block;size_independent_when_marginal<<floor")
 
+    # global (wavefront) mode: best ratio, but a point query used to decode
+    # the WHOLE prefix. Checkpointed wavefronts bound it to one anchor
+    # window — sub-prefix latency at near-global ratio.
+    interval = 4
+    g = encoder.encode(buf, block_size=16384, mode="global")
+    ga = encoder.encode(buf, block_size=16384, mode="global",
+                        anchor_interval=interval)
+    dg = Decoder(g, backend="ref")
+    dga = Decoder(ga, backend="ref")
+    deep = np.array([g.n_blocks - 2])
+    s, ln = int(g.block_start[deep[0]]), int(g.block_len[deep[0]])
+    for dd in (dg, dga):
+        got = np.asarray(dd.decode_blocks(deep))[0]
+        assert np.array_equal(got[:ln], ref[s:s + ln])
+    t_prefix = time_fn(lambda: dg.decode_blocks(deep), iters=5)
+    t_anchor = time_fn(lambda: dga.decode_blocks(deep), iters=5)
+    dg.decode_blocks(deep)
+    blocks_prefix = dg.decoded_blocks_last
+    dga.decode_blocks(deep)
+    blocks_anchor = dga.decoded_blocks_last
+    assert blocks_anchor <= interval + 1 < blocks_prefix
+    row("ra/global_seek_whole_prefix", t_prefix,
+        f"blocks_decoded={blocks_prefix};ratio={g.ratio:.2f}")
+    row("ra/global_seek_anchored", t_anchor,
+        f"blocks_decoded={blocks_anchor};interval={interval};"
+        f"speedup_vs_prefix={t_prefix/t_anchor:.1f}x;"
+        f"ratio={ga.ratio:.2f};ratio_cost={g.ratio/ga.ratio:.3f}x")
+
 
 if __name__ == "__main__":
     main()

@@ -22,8 +22,19 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
     return best
 
 
+# every row() call lands here so the driver can emit a machine-readable
+# snapshot (`benchmarks.run --json`) for bench-regression gating
+ROWS: list = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
+
+
 def row(name: str, seconds: float, derived: str = "") -> str:
     out = f"{name},{seconds * 1e6:.1f},{derived}"
+    ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                 "derived": derived})
     print(out, flush=True)
     return out
 

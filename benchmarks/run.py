@@ -4,12 +4,42 @@ Prints ``name,us_per_call,derived`` CSV rows. All wall-clock numbers are
 THIS container's CPU-device numbers (labeled `cpu`); TPU v5e performance is
 projected by the roofline report (EXPERIMENTS.md §Roofline), never faked.
 
-  python -m benchmarks.run [--small] [--only mode2,ratio,...]
+  python -m benchmarks.run [--small] [--only mode2,ratio,...] [--json out]
+
+``--json out.json`` additionally writes a machine-readable snapshot
+(every row + run metadata) — the input of `scripts/bench_compare.py`,
+which gates CI on regressions against the committed `BENCH_baseline.json`.
 """
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
+
+import numpy as np
+
+from benchmarks import common
+
+
+def calibrate_us(iters: int = 5) -> float:
+    """Best-of-N wall time of a fixed, seeded reference workload (BLAS
+    matmul + memory-bound sort) in µs. Snapshots carry it in meta so
+    `bench_compare.py` can normalize away machine-speed drift between the
+    baseline runner and the current one: a genuinely slower machine slows
+    the reference by the same factor as the benchmarks, a code regression
+    slows only the benchmarks."""
+    rng = np.random.default_rng(0)
+    a = rng.random((384, 384))
+    v = rng.integers(0, 1 << 30, size=2_000_000, dtype=np.int64)
+    best = float("inf")
+    for i in range(iters + 1):
+        t0 = time.perf_counter()
+        (a @ a).sum()
+        np.sort(v, kind="stable")
+        if i > 0:                       # first pass is warmup
+            best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 _TABLES = [
     ("mode1", "benchmarks.bench_mode1", "Table 1: Mode 1 host-to-host"),
@@ -36,10 +66,15 @@ def main() -> None:
     ap.add_argument("--small", action="store_true",
                     help="reduced corpora (CI-speed)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable snapshot of every row "
+                         "(for scripts/bench_compare.py gating)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
+    common.reset_rows()
+    calib0 = calibrate_us() if args.json else None
     failures = []
     for key, mod_name, desc in _TABLES:
         if only and key not in only:
@@ -53,6 +88,26 @@ def main() -> None:
             traceback.print_exc()
             failures.append(key)
         print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        # bracket the run: best machine speed observed (matches the
+        # best-of-N the rows themselves record)
+        calib = min(calib0, calibrate_us())
+        print(f"# calib/reference: {calib:.1f}us")
+        snap = {
+            "meta": {
+                "small": args.small,
+                "only": sorted(only) if only else None,
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+                "failures": failures,
+                "calib_us": round(calib, 1),
+            },
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# snapshot: {len(common.ROWS)} rows -> {args.json}")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -1,16 +1,52 @@
 #!/usr/bin/env bash
-# One-command tier-1 reproduction (ROADMAP.md "Tier-1 verify").
+# One-command tier-1 reproduction + CI lanes (ROADMAP.md "Tier-1 verify").
 #
-#   scripts/ci.sh            # compileall + full suite + benchmark smoke
-#   scripts/ci.sh -k codec   # any extra pytest args pass through
+#   scripts/ci.sh               # compileall + FULL suite + bench gate
+#   scripts/ci.sh --fast        # fast lane: skips @pytest.mark.slow
+#   scripts/ci.sh --no-bench    # tests only (no bench smoke / gate)
+#   scripts/ci.sh --bench-only  # bench smoke + regression gate only
+#   scripts/ci.sh -k codec      # any extra pytest args pass through
 #
 # Works fully offline: when `hypothesis` is absent the property tests run
 # through tests/_hypothesis_compat.py instead of failing collection.
+#
+# The bench gate runs the --small smoke set with a JSON snapshot and
+# fails on throughput regression against the committed BENCH_baseline.json
+# (>25% for stable rows; rows the baseline observed to be noisy gate at
+# their recorded spread x1.5 — see scripts/bench_compare.py). Refresh
+# deliberate perf changes with
+# `python scripts/bench_compare.py --merge BENCH_baseline.json run*.json`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m compileall -q src
-python -m pytest -x -q "$@"
-# bench smoke: index/fetch/query planes, the block-size sweep (the
-# regime that exposed the u16 offset truncation), and the block cache
-python -m benchmarks.run --small --only index,fetch_batch,query,blocksize,cache
+
+FAST=0 BENCH=1 TESTS=1
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) FAST=1 ;;
+    --no-bench) BENCH=0 ;;
+    --bench-only) TESTS=0 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
+python -m compileall -q src benchmarks scripts
+
+if [ "$TESTS" = 1 ]; then
+  if [ "$FAST" = 1 ]; then
+    python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
+  else
+    python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+  fi
+fi
+
+if [ "$BENCH" = 1 ]; then
+  # bench smoke: index/fetch/query planes, the block-size sweep (the
+  # regime that exposed the u16 offset truncation), the block cache, and
+  # random access incl. the checkpointed-wavefront seek
+  python -m benchmarks.run --small \
+    --only index,fetch_batch,query,blocksize,cache,random_access \
+    --json bench_current.json
+  python scripts/bench_compare.py BENCH_baseline.json bench_current.json
+fi

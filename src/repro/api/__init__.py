@@ -17,6 +17,7 @@ from repro.api.cache import (BlockCache, EvictionPolicy, FrequencyPolicy,
 from repro.api.executors import (ChunkStats, DeviceExecutor, ShardedExecutor,
                                  StreamingExecutor)
 from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
+                            anchor_floor, anchor_window_groups,
                             covering_blocks)
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "DecodePlan", "DeviceExecutor", "EvictionPolicy", "FrequencyPolicy",
     "GenomicArchive", "LRUPolicy", "NameTable", "PinRangePolicy",
     "QueryPlanner", "ReadId", "Region", "ShardedExecutor",
-    "StreamingExecutor", "covering_blocks", "normalize", "parse_region",
+    "StreamingExecutor", "anchor_floor", "anchor_window_groups",
+    "covering_blocks", "normalize", "parse_region",
 ]

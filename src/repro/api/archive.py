@@ -46,16 +46,20 @@ class GenomicArchive:
     def from_bytes(cls, data: bytes, block_size: int = 16 * 1024,
                    mode: str = "ra", entropy: str = "rans",
                    backend: str = "auto", cache_blocks: int = 0,
-                   cache_policy="lru") -> "GenomicArchive":
+                   cache_policy="lru",
+                   anchor_interval: int = 0) -> "GenomicArchive":
         """FASTQ bytes → encoded archive + ReadIndex + device name table.
         cache_blocks > 0 enables the device-resident decoded-block cache
-        ("lru" | "freq" | an `EvictionPolicy` instance)."""
+        ("lru" | "freq" | an `EvictionPolicy` instance). `anchor_interval`
+        (global mode) emits a wavefront restart point every that many
+        blocks, so point queries decode one anchor window instead of the
+        whole prefix — global-class ratios with bounded random access."""
         from repro.core.encoder import encode
         from repro.core.index import ReadIndex, parse_fastq_records
         from repro.core.residency import CompressedResidentStore
         starts, names = parse_fastq_records(data)
         archive = encode(data, block_size=block_size, mode=mode,
-                         entropy=entropy)
+                         entropy=entropy, anchor_interval=anchor_interval)
         index = ReadIndex(starts=starts, block_size=block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
@@ -66,8 +70,8 @@ class GenomicArchive:
     def from_records(cls, data: bytes, record_bytes: int,
                      block_size: int = 16 * 1024, mode: str = "ra",
                      entropy: str = "rans", backend: str = "auto",
-                     cache_blocks: int = 0,
-                     cache_policy="lru") -> "GenomicArchive":
+                     cache_blocks: int = 0, cache_policy="lru",
+                     anchor_interval: int = 0) -> "GenomicArchive":
         """Fixed-size records (tokenized corpora): arithmetic index, no
         names. `data` is truncated to a whole number of records."""
         from repro.core.encoder import encode
@@ -78,7 +82,7 @@ class GenomicArchive:
             raise ValueError("corpus smaller than one record")
         data = data[:n_rec * record_bytes]
         archive = encode(data, block_size=block_size, mode=mode,
-                         entropy=entropy)
+                         entropy=entropy, anchor_interval=anchor_interval)
         index = ReadIndex.fixed_records(n_rec, record_bytes, block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
@@ -103,13 +107,17 @@ class GenomicArchive:
         return np.asarray(rows[0])[:int(lens[0])]
 
     def stream(self, addrs: Sequence[Address], max_resident_bytes: int,
-               mode2: bool = True) -> Iterator[np.ndarray]:
+               mode2: bool = True, verify: bool = False
+               ) -> Iterator[np.ndarray]:
         """Budgeted decode of queries of ANY size: yields u8 chunks whose
         concatenation is the concatenated payloads, never materializing
-        more than `max_resident_bytes` of decoded rows + gather output."""
+        more than `max_resident_bytes` of decoded rows + gather output.
+        `verify=True` checks per-block digests on device before each chunk
+        is cropped to spans (raises `BlockDigestError` on corruption)."""
         ex = StreamingExecutor(self.store,
                                max_resident_bytes=max_resident_bytes,
-                               mode2=mode2, planner=self.planner)
+                               mode2=mode2, planner=self.planner,
+                               verify=verify)
         return ex.chunks(addrs)
 
     def __getitem__(self, key: Union[Address, slice]) -> np.ndarray:

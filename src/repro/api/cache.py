@@ -20,6 +20,16 @@ Eviction/admission is pluggable: `LRUPolicy` (recency), `FrequencyPolicy`
 (frequency-aware admission — Zipfian serving working sets should not let
 one-hit wonders evict hot blocks), and `PinRangePolicy` (hot prefixes
 stay resident unconditionally).
+
+Checkpointed-wavefront ("global" + anchors) archives compose here too:
+slots stay keyed by block id — decoded block bytes are identical
+whichever anchor window materialized them (the bit-identity invariant the
+anchor tests pin down) — while the miss-decode callback
+(`Decoder.decode_blocks`) groups the miss set by governing anchor window,
+so a miss launch decodes at most anchor_interval + covering-span blocks
+instead of the whole prefix. That is what makes cached global reads
+non-degenerate: hits are still one buffer gather, and misses pay one
+bounded window, not the archive.
 """
 from __future__ import annotations
 

@@ -27,7 +27,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api.address import Address
-from repro.api.plan import DecodePlan, QueryPlanner
+from repro.api.plan import DecodePlan, QueryPlanner, anchor_floor
 from repro.core.residency import (_fetch_dev_jit, _fetch_reads_jit,
                                   _gather_jit, _pad_pow2)
 
@@ -70,7 +70,13 @@ class DeviceExecutor:
             return (jnp.zeros((0, plan.max_len), jnp.uint8),
                     jnp.zeros((0,), jnp.int32))
         dec = store.decoder
-        jitted = mode2 and store._cache_cap == 0
+        # checkpointed-wavefront archives take the staged path: the decoder
+        # groups the covering set by anchor window (bounded decode instead
+        # of the whole prefix the jitted device core would materialize),
+        # and the rows ride the block cache when enabled
+        anchored = (dec.da.mode == "global" and dec.da.anchors is not None
+                    and dec.da.anchors.size > 0)
+        jitted = mode2 and store._cache_cap == 0 and not anchored
         if jitted and plan.device_ids is not None:
             out, lens = _fetch_reads_jit(
                 dec.arrays, store._starts_blk, store._starts_rem,
@@ -111,7 +117,9 @@ class ChunkStats:
     gather really materializes."""
     n_spans: int
     n_blocks: int
-    decoded_bytes: int        # unique covering rows: U * block_size (exact)
+    decoded_bytes: int        # blocks actually decoded * block_size: the
+                              # unique covering rows for "ra", the summed
+                              # anchor windows for checkpointed wavefronts
     gather_bytes: int         # padded gather output: pow2(B) * max_len
     yielded_bytes: int
 
@@ -131,28 +139,72 @@ class StreamingExecutor:
     payloads of the addressed spans, bit-perfectly, while no chunk ever
     materializes more than the budget. `chunk_log` records the accounting.
 
-    The decoded-block LRU is bypassed (streaming scans would thrash it);
-    wavefront ("global") archives decode whole-prefix by construction and
-    cannot honor a sub-archive budget.
+    The decoded-block LRU is bypassed (streaming scans would thrash it).
+    The budget must hold the archive's atomic decode unit: one block for
+    "ra", one anchor window (`(anchor_interval + 1) * block_size`) for
+    checkpointed wavefronts, and the ENTIRE prefix for anchor-free
+    wavefront ("global") archives — those decode whole-prefix by
+    construction, so a sub-archive budget is rejected up front instead of
+    being silently violated on device.
+
+    `verify=True` recomputes each decoded block's FNV-1a-64 digest on
+    device before rows are cropped to spans, raising `BlockDigestError`
+    naming the true block id on the first corrupt block of any chunk.
     """
 
     def __init__(self, store, max_resident_bytes: Optional[int] = None,
                  max_blocks_per_chunk: Optional[int] = None,
-                 mode2: bool = True, planner: Optional[QueryPlanner] = None):
+                 mode2: bool = True, planner: Optional[QueryPlanner] = None,
+                 verify: bool = False):
         self.store = store
         self.planner = planner or QueryPlanner(store)
         bs = store.block_size
-        if max_resident_bytes is not None and max_resident_bytes < 2 * bs:
-            raise ValueError(
-                f"max_resident_bytes={max_resident_bytes} cannot hold one "
-                f"decoded block + its output; need >= {2 * bs}")
+        da = store.decoder.da
+        anchors = getattr(da, "anchors", None)
+        self._anchors = (np.asarray(anchors, np.int64)
+                         if anchors is not None and np.asarray(anchors).size
+                         and da.mode == "global" else np.zeros(0, np.int64))
+        self._global = da.mode == "global"
+        # the atomic decode unit a budget must hold: one block for "ra",
+        # one anchor window for checkpointed wavefronts (bounded by the
+        # archive — an interval beyond n_blocks is one whole-archive
+        # window), the ENTIRE prefix for anchor-free global archives
+        # (whole-prefix decode by construction; a budget below that would
+        # be silently violated on device, so it is rejected up front)
+        if not self._global:
+            interval = 0
+        elif self._anchors.size:
+            interval = min(da.anchor_interval, da.n_blocks)
+        else:
+            interval = da.n_blocks
+        if max_resident_bytes is not None:
+            need = max(2, interval + 1) * bs
+            if max_resident_bytes < need:
+                hint = ""
+                if interval:
+                    hint = (f" ((anchor_interval={interval} + 1) * "
+                            f"block_size)" if self._anchors.size else
+                            f" (anchor-free global archives decode the "
+                            f"whole {da.n_blocks}-block prefix; encode "
+                            f"with anchor_interval to stream under a "
+                            f"smaller budget)")
+                raise ValueError(
+                    f"max_resident_bytes={max_resident_bytes} cannot hold "
+                    f"one decode window + its output; need >= {need}"
+                    + hint)
         self.max_resident_bytes = max_resident_bytes
         if max_blocks_per_chunk is None:
-            max_blocks_per_chunk = (max(1, max_resident_bytes // (2 * bs))
-                                    if max_resident_bytes is not None
-                                    else store.decoder.da.n_blocks or 1)
+            if max_resident_bytes is not None:
+                # anchored global: a K-block piece may decode K+interval-1
+                # window blocks and gather K*bs — size K so a lone piece
+                # still fits the budget
+                max_blocks_per_chunk = max(
+                    1, (max_resident_bytes // bs - max(interval - 1, 0)) // 2)
+            else:
+                max_blocks_per_chunk = store.decoder.da.n_blocks or 1
         self.max_blocks_per_chunk = int(max_blocks_per_chunk)
         self.mode2 = mode2
+        self.verify = verify
         self.chunk_log: List[ChunkStats] = []
 
     # ------------------------------------------------------------- pieces
@@ -171,6 +223,19 @@ class StreamingExecutor:
                 yield pos, nxt - pos
                 pos = nxt
 
+    def _piece_blocks(self, s: int, ln: int) -> set:
+        """Blocks a piece's decode materializes: its covering blocks, widened
+        to the governing anchor window for checkpointed wavefronts (the
+        decode cannot start mid-window). Not used for anchor-free global
+        archives — their every chunk decodes the whole prefix, which
+        `chunks` accounts as a constant instead of materializing an
+        n_blocks-sized set per piece."""
+        bs = self.store.block_size
+        b_lo, b_hi = s // bs, -(-(s + ln) // bs)
+        if self._anchors.size:
+            b_lo = int(anchor_floor(np.asarray([b_lo]), self._anchors)[0])
+        return set(range(b_lo, b_hi))
+
     def chunks(self, addrs: Sequence[Address]) -> Iterator[np.ndarray]:
         """Yield u8 chunks; their concatenation == the concatenation of the
         addressed payloads, in address order."""
@@ -183,9 +248,15 @@ class StreamingExecutor:
         def pow2(n):
             return 1 << max(0, n - 1).bit_length()
 
+        whole_prefix = self._global and not self._anchors.size
+        n_blocks = self.store.decoder.da.n_blocks
         for s, ln in self._pieces(addrs):
-            pb = set(range(s // bs, -(-(s + ln) // bs)))
-            nblk = len(cur_blocks | pb)
+            if whole_prefix:
+                pb = set()
+                nblk = n_blocks
+            else:
+                pb = self._piece_blocks(s, ln)
+                nblk = len(cur_blocks | pb)
             # plan_spans pow2-pads the span batch, so the gather output a
             # chunk materializes is pow2(B) * max_len — cost it that way,
             # or a 5-span chunk would quietly gather 8 rows past budget
@@ -217,7 +288,7 @@ class StreamingExecutor:
         dec = self.store.decoder
         decode = (dec.decode_blocks if self.mode2
                   else dec.decode_blocks_host_entropy)
-        rows = decode(uniq.astype(np.int32))
+        rows = decode(uniq.astype(np.int32), verify=self.verify)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=bs, max_len=plan.max_len)
@@ -225,9 +296,13 @@ class StreamingExecutor:
         parts = [host[i, :int(lengths[i])] for i in range(len(pieces))]
         payload = (np.concatenate(parts) if parts
                    else np.zeros(0, np.uint8))
+        # decoded_blocks_last is what the decoder actually materialized —
+        # == uniq for "ra", the summed anchor windows for checkpointed
+        # wavefronts, the whole prefix for anchor-free global archives
+        n_decoded = int(dec.decoded_blocks_last)
         self.chunk_log.append(ChunkStats(
-            n_spans=len(pieces), n_blocks=int(uniq.size),
-            decoded_bytes=int(uniq.size) * bs,
+            n_spans=len(pieces), n_blocks=n_decoded,
+            decoded_bytes=n_decoded * bs,
             gather_bytes=plan.batch * plan.max_len,
             yielded_bytes=int(payload.size)))
         return payload

@@ -52,6 +52,39 @@ def covering_blocks(starts: np.ndarray, lengths: np.ndarray, block_size: int,
     return b0, r0, end_blk, cover
 
 
+def anchor_floor(blocks: np.ndarray, anchors: np.ndarray) -> np.ndarray:
+    """Per-block governing anchor: the greatest anchor block id <= block.
+    `anchors` is the archive's sorted anchor table (anchors[0] == 0);
+    empty → everything falls to block 0 (whole-prefix semantics)."""
+    blocks = np.asarray(blocks, np.int64)
+    anchors = np.asarray(anchors, np.int64)
+    if anchors.size == 0:
+        return np.zeros(blocks.shape, np.int64)
+    i = np.searchsorted(anchors, blocks, side="right") - 1
+    return anchors[np.maximum(i, 0)]
+
+
+def anchor_window_groups(sel: np.ndarray, anchors: np.ndarray
+                         ) -> list:
+    """Partition a block selection by governing anchor window.
+
+    Returns [(win_first, win_last, idx)] where `idx` are positions into
+    `sel` (original order preserved within a group), `win_first` is the
+    group's anchor and `win_last` its highest selected block — the decode
+    window [win_first, win_last] is what a checkpointed-wavefront decode
+    materializes for that group. Empty `anchors` yields one group rooted
+    at block 0 (the anchor-free whole-prefix window)."""
+    sel = np.asarray(sel, np.int64).reshape(-1)
+    if sel.size == 0:
+        return []
+    gov = anchor_floor(sel, anchors)
+    groups = []
+    for a in np.unique(gov):
+        idx = np.flatnonzero(gov == a)
+        groups.append((int(a), int(sel[idx].max()), idx))
+    return groups
+
+
 def pad_pow2_spans(starts: np.ndarray, lengths: np.ndarray
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Pad a span batch to the next power of two by repeating the last span
@@ -122,6 +155,27 @@ class DecodePlan:
             row_map = np.searchsorted(uniq, cover).astype(np.int32)
             self._cover = (b0, r0, end_blk, uniq, row_map)
         return self._cover
+
+    def anchor_windows(self, anchors: np.ndarray) -> list:
+        """This plan's covering set grouped by governing anchor window:
+        [(win_first, win_last, idx-into-uniq)]. The total decode work of a
+        checkpointed-wavefront execution is sum(win_last - win_first + 1)
+        blocks — bounded by covering-span + anchor_interval per group
+        instead of the whole prefix. Cost-prediction API: the execution
+        paths use the same `anchor_floor`/`anchor_window_groups`
+        primitives (decoder groups, StreamingExecutor widens pieces);
+        this method lets planners/telemetry price a plan without running
+        it, and the anchor tests assert it against the decoder's actual
+        `decoded_blocks_last`."""
+        _, _, _, uniq, _ = self.host_cover()
+        return anchor_window_groups(uniq, anchors)
+
+    def anchor_decode_blocks(self, anchors: np.ndarray) -> int:
+        """Blocks a checkpointed-wavefront ("global") decode of this plan
+        touches: the summed anchor-window sizes. Empty `anchors` means one
+        window rooted at block 0, i.e. the whole covering prefix."""
+        return sum(last - first + 1
+                   for first, last, _ in self.anchor_windows(anchors))
 
 
 @dataclasses.dataclass

@@ -54,6 +54,8 @@ class DeviceArchive:
     t_max_lit: int              # max rANS steps, literal streams
     t_max_cmd: int              # max rANS steps, plane streams
     offset_bytes: int
+    anchor_interval: int = 0    # wavefront restart spacing (0 = anchor-free)
+    anchors: Optional[np.ndarray] = None   # host i64 anchor block ids
 
     @property
     def device_bytes(self) -> int:
@@ -91,6 +93,8 @@ def to_device(a: Archive) -> DeviceArchive:
         t_max_lit=tmax(lit_cols),
         t_max_cmd=tmax(cmd_cols),
         offset_bytes=int(a.offset_bytes),
+        anchor_interval=int(a.anchor_interval),
+        anchors=np.asarray(a.anchors, np.int64),
     )
 
 
@@ -245,7 +249,8 @@ def _entropy_decode_host(a: Archive, sel: np.ndarray):
 # ------------------------------------------------------------------- decode
 def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
                  block_size: int, max_cmds: int, backend: str,
-                 offset_bytes: int, total_size: Optional[int] = None):
+                 offset_bytes: int, total_size: Optional[int] = None,
+                 win_base=0):
     from repro.kernels import ops, ref
     lit_lens = _u16_from_planes(streams["commands"], n_cmds, max_cmds)
     match_lens = _u16_from_planes(streams["lengths"], n_cmds, max_cmds)
@@ -260,12 +265,18 @@ def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
         return ops.lz77_decode_blocks(
             lit_lens, match_lens, offsets, n_cmds, streams["literals"],
             block_len, out_size=block_size, backend=backend)
-    # global/wavefront: one flat pointer space
+    # global/wavefront: one flat pointer space rooted at `win_base` — the
+    # absolute byte start of the decode window (0 = whole prefix). Anchor
+    # archives guarantee every match source >= its window's anchor, so
+    # rebased pointers stay inside [0, total_size). Slots of zero-length
+    # commands go negative after rebasing but are never dereferenced
+    # (no output byte maps into an empty match region).
+    offsets = offsets - win_base
     B = lit_lens.shape[0]
     lit_base = jnp.arange(B, dtype=jnp.int32) * streams["literals"].shape[1]
     flat = ref.lz77_decode_global_ref(
         lit_lens, match_lens, offsets, n_cmds, streams["literals"],
-        lit_base, block_start, block_len, out_size=block_size,
+        lit_base, block_start - win_base, block_len, out_size=block_size,
         total_size=total_size)
     return flat
 
@@ -286,9 +297,12 @@ def _decode_sel_core(arrays, sel, da_meta, backend):
         entropy=entropy, max_cmds=max_cmds, t_max_lit=t_lit, t_max_cmd=t_cmd,
         offset_bytes=offset_bytes)
     streams = _entropy_decode_sel(da, sel, backend)
+    # global selections are contiguous decode windows (whole prefix or an
+    # anchor window); the window's byte base anchors the flat pointer space
+    win_base = da.block_start[sel[0]] if mode == "global" else 0
     return _match_phase(mode, streams, da.n_cmds[sel], da.block_len[sel],
                         da.block_start[sel], block_size, max_cmds, backend,
-                        offset_bytes, total_size)
+                        offset_bytes, total_size, win_base=win_base)
 
 
 _decode_sel_jit = partial(jax.jit, static_argnames=("da_meta", "backend"))(
@@ -354,7 +368,12 @@ class Decoder:
 
     decode_blocks(sel) → (B, block_size) uint8 (Mode 2, device-resident)
     decode_blocks_host_entropy(sel) → same, Mode 1
+    decode_from_anchor(first, last) → anchor-window decode ("global")
     decode_all() / decode_range(lo, hi) → bytes (host copy, convenience)
+
+    `decoded_blocks_last` records how many blocks the most recent decode
+    call actually materialized (entropy + match work) — for a checkpointed
+    wavefront that is the summed anchor-window sizes, not the prefix.
     """
 
     def __init__(self, archive: Archive, backend: str = "auto"):
@@ -369,6 +388,7 @@ class Decoder:
             "block_len": self.da.block_len,
         }
         self._store_view = None
+        self.decoded_blocks_last = 0
 
     def _api_store(self):
         """Store-shaped adapter over this decoder so the host APIs ride the
@@ -382,9 +402,11 @@ class Decoder:
             self._store_view.executor = DeviceExecutor(self._store_view)
         return self._store_view
 
-    def _meta(self, n_sel: int):
+    def _meta(self, n_sel: int, total: Optional[int] = None):
         da = self.da
-        total = da.n_blocks * da.block_size if da.mode == "global" else None
+        if total is None:
+            total = da.n_blocks * da.block_size if da.mode == "global" \
+                else None
         return (da.block_size, da.n_blocks, da.max_cmds, da.t_max_lit,
                 da.t_max_cmd, da.mode, da.entropy, da.offset_bytes, total,
                 self._freqs_host)
@@ -410,39 +432,125 @@ class Decoder:
                 f"{int(want[bad[0]]):#018x} "
                 f"({bad.size} of {sel.size} selected blocks corrupt)")
 
+    # ---------------------------------------------------- window decode
+    def _window_rows(self, first: int, last: int) -> jnp.ndarray:
+        """Mode-2 decode of the contiguous global window [first, last]:
+        (last-first+1, block_size) u8 rows. The flat pointer space is the
+        window, not the archive — total_size scales with the window."""
+        L = last - first + 1
+        wsel = jnp.arange(first, last + 1, dtype=jnp.int32)
+        flat = _decode_sel_jit(self.arrays, wsel,
+                               self._meta(L, total=L * self.da.block_size),
+                               self.backend)
+        self.decoded_blocks_last += L
+        return flat.reshape(L, self.da.block_size)
+
+    def _anchor_groups(self, sel_np: np.ndarray) -> list:
+        from repro.api.plan import anchor_window_groups
+        return anchor_window_groups(sel_np, self.archive.anchors)
+
+    def _assemble_groups(self, sel_np: np.ndarray, window_rows) -> jnp.ndarray:
+        """Group a global selection by governing anchor window, decode each
+        window via `window_rows(first, last) -> (L, block_size)`, and
+        reassemble rows in the selection's original order."""
+        groups = self._anchor_groups(sel_np)
+        pieces = [window_rows(first, last)[sel_np[idx] - first]
+                  for first, last, idx in groups]
+        order = np.concatenate([idx for _, _, idx in groups])
+        inv = np.empty(order.size, np.int64)
+        inv[order] = np.arange(order.size)
+        return jnp.concatenate(pieces, axis=0)[inv]
+
+    def decode_from_anchor(self, first: int, last: int,
+                           verify: bool = False) -> jnp.ndarray:
+        """Global archives: decode blocks [first, last] by materializing
+        only the [nearest-anchor(first), last] window instead of the whole
+        prefix — the checkpointed-wavefront random-access path. Returns
+        (last-first+1, block_size) u8 rows."""
+        if self.da.mode != "global":
+            raise ValueError('decode_from_anchor requires mode="global" '
+                             '("ra" blocks decode directly)')
+        if not 0 <= first <= last < self.da.n_blocks:
+            raise IndexError(f"block range [{first}, {last}] outside "
+                             f"[0, {self.da.n_blocks})")
+        from repro.api.plan import anchor_floor
+        win_first = int(anchor_floor(np.asarray([first]),
+                                     self.archive.anchors)[0])
+        self.decoded_blocks_last = 0
+        out = self._window_rows(win_first, last)[first - win_first:]
+        if verify:
+            self.verify_rows(np.arange(first, last + 1), out)
+        return out
+
+    def _decode_global_rows(self, sel_np: np.ndarray) -> jnp.ndarray:
+        """Arbitrary global block selection → (B, block_size) rows via
+        per-anchor-window decodes (whole prefix when anchor-free). The
+        selection is grouped by governing anchor so one call never decodes
+        across windows it does not need."""
+        self.decoded_blocks_last = 0
+        if sel_np.size == 0:
+            return jnp.zeros((0, self.da.block_size), jnp.uint8)
+        if self.archive.anchors.size == 0:
+            # anchor-free wavefront: decode the whole prefix, NOT
+            # [0, max(sel)] — the window length is the jit trace key, and
+            # a fixed n_blocks window gives ONE trace for every selection
+            # where per-max windows would compile one variant per distinct
+            # max (anchored windows don't have this problem: their lengths
+            # are bounded by interval + span)
+            rows = self._window_rows(0, self.da.n_blocks - 1)
+            return rows[sel_np]
+        return self._assemble_groups(sel_np, self._window_rows)
+
     def decode_blocks(self, sel, verify: bool = False) -> jnp.ndarray:
         sel = jnp.asarray(sel, jnp.int32)
         if self.da.mode == "global":
-            # wavefront decode is whole-prefix by construction
-            flat = _decode_sel_jit(self.arrays,
-                                   jnp.arange(self.da.n_blocks,
-                                              dtype=jnp.int32),
-                                   self._meta(self.da.n_blocks), self.backend)
-            rows = flat.reshape(self.da.n_blocks, self.da.block_size)
-            out = rows[sel]
+            out = self._decode_global_rows(np.asarray(sel, np.int64))
         else:
             out = _decode_sel_jit(self.arrays, sel, self._meta(len(sel)),
                                   self.backend)
+            self.decoded_blocks_last = int(sel.shape[0])
         if verify:
             self.verify_rows(np.asarray(sel), out)
         return out
 
     def decode_blocks_host_entropy(self, sel, verify: bool = False
                                    ) -> jnp.ndarray:
-        """Mode 1: host entropy + device match."""
-        from repro.kernels import ops
+        """Mode 1: host entropy + device match. Global selections decode
+        per anchor window ([0, max(sel)] when anchor-free) so every
+        cross-block match reference resolves inside the decoded window —
+        a partial selection never reads bytes that were not decoded."""
         sel = np.asarray(sel)
-        streams = _entropy_decode_host(self.archive, sel)
         a = self.archive
-        total = int(a.n_blocks * a.block_size) if a.mode == "global" else None
-        out = _match_phase(
-            a.mode, streams, jnp.asarray(a.n_cmds[sel]),
-            jnp.asarray(a.block_len[sel]),
-            jnp.asarray(a.block_start[sel].astype(np.int32)),
-            a.block_size, int(a.n_cmds.max(initial=1)), self.backend,
-            a.offset_bytes, total)
+        max_cmds = int(a.n_cmds.max(initial=1))
         if a.mode == "global":
-            out = out.reshape(a.n_blocks, a.block_size)[sel]
+            self.decoded_blocks_last = 0
+            sel64 = sel.astype(np.int64).reshape(-1)
+            if sel64.size == 0:
+                return jnp.zeros((0, a.block_size), jnp.uint8)
+
+            def window_rows(first: int, last: int) -> jnp.ndarray:
+                wsel = np.arange(first, last + 1)
+                L = wsel.size
+                streams = _entropy_decode_host(a, wsel)
+                flat = _match_phase(
+                    "global", streams, jnp.asarray(a.n_cmds[wsel]),
+                    jnp.asarray(a.block_len[wsel]),
+                    jnp.asarray(a.block_start[wsel].astype(np.int32)),
+                    a.block_size, max_cmds, self.backend, a.offset_bytes,
+                    total_size=L * a.block_size,
+                    win_base=int(a.block_start[first]))
+                self.decoded_blocks_last += L
+                return flat.reshape(L, a.block_size)
+
+            out = self._assemble_groups(sel64, window_rows)
+        else:
+            streams = _entropy_decode_host(a, sel)
+            out = _match_phase(
+                a.mode, streams, jnp.asarray(a.n_cmds[sel]),
+                jnp.asarray(a.block_len[sel]),
+                jnp.asarray(a.block_start[sel].astype(np.int32)),
+                a.block_size, max_cmds, self.backend, a.offset_bytes, None)
+            self.decoded_blocks_last = int(sel.size)
         if verify:
             self.verify_rows(sel, out)
         return out

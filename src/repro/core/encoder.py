@@ -40,11 +40,28 @@ def encode(data: bytes | np.ndarray,
            block_size: int = DEFAULT_BLOCK_SIZE,
            mode: str = "ra",
            entropy: str = "rans",
-           hash_bits: int = 17) -> Archive:
-    """Compress `data` into an ACEAPEX archive."""
+           hash_bits: int = 17,
+           anchor_interval: int = 0) -> Archive:
+    """Compress `data` into an ACEAPEX archive.
+
+    `anchor_interval` (global mode only) emits a wavefront restart point
+    every that many blocks: the match window resets at each anchor, so
+    every match in blocks [anchor, next_anchor) sources only bytes at or
+    after the anchor's start. Any block then decodes from its governing
+    anchor instead of the whole prefix (bounded random access), at the
+    cost of matches that can no longer cross anchor boundaries.
+    0 keeps the anchor-free whole-file window.
+    """
     data = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray)) \
         else np.ascontiguousarray(data, np.uint8)
     n = data.shape[0]
+    anchor_interval = int(anchor_interval)
+    if anchor_interval < 0:
+        raise ValueError(f"anchor_interval must be >= 0, got {anchor_interval}")
+    if anchor_interval and mode != "global":
+        raise ValueError(
+            'anchor_interval only applies to mode="global" ("ra" blocks '
+            "are already self-contained restart points)")
     # "ra" offsets are block-local; two planes hold them only while the
     # block fits 16 bits. Larger blocks (e.g. PAPER1_BLOCK_SIZE) switch to
     # four planes — storing a >=64 KiB offset in two would silently
@@ -59,8 +76,26 @@ def encode(data: bytes | np.ndarray,
     block_len = np.minimum(n - block_start, block_size).astype(np.int32)
     block_len = np.maximum(block_len, 0)
 
+    anchors = np.zeros(0, np.int64)
     if mode == "global":
-        g_cand, g_mlen = ms.find_matches(data, base=0, hash_bits=hash_bits)
+        if anchor_interval:
+            anchors = np.arange(0, n_blocks, anchor_interval, dtype=np.int64)
+        if anchors.size:
+            # checkpointed wavefront: one independent match search per
+            # anchor window — candidates cannot reference bytes before
+            # their window's anchor, so [anchor, last] decodes alone
+            g_cand = np.full(n, -1, np.int64)
+            g_mlen = np.zeros(n, np.int64)
+            bounds = np.append(anchors, n_blocks) * block_size
+            for ws, we in zip(bounds[:-1], np.minimum(bounds[1:], n)):
+                ws, we = int(ws), int(we)
+                c, m = ms.find_matches(data[ws:we], base=ws,
+                                       hash_bits=hash_bits)
+                g_cand[ws:we] = c
+                g_mlen[ws:we] = m
+        else:
+            g_cand, g_mlen = ms.find_matches(data, base=0,
+                                             hash_bits=hash_bits)
 
     streams: List[np.ndarray] = []
     class_ids: List[int] = []
@@ -168,4 +203,6 @@ def encode(data: bytes | np.ndarray,
         block_fnv=block_fnv,
         file_fnv=file_digest(block_fnv),
         offset_bytes=offset_bytes,
+        anchor_interval=anchor_interval if anchors.size else 0,
+        anchors=anchors,
     )

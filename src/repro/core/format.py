@@ -21,6 +21,15 @@ planes), OFFSETS (absolute-offset byte planes), COMMANDS (literal-run-length
 byte planes).  Command j ≡ (lit_len[j], match_len[j], offset[j]); the
 command sequence is the strict alternation literal-run → match with zero
 lengths permitted, so COMMANDS carries the lit-run lengths.
+
+Checkpointed wavefronts (v2 header): "global" archives may carry an
+*anchor table* — every `anchor_interval` blocks the encoder restarts the
+match window, so every match in blocks [anchor, next_anchor) references
+only bytes at or after `block_start[anchor]`. Any block range
+[first, last] then decodes from the nearest anchor at or before `first`
+instead of the whole prefix — Kerbiriou & Chikhi-style periodic restart
+points fused with the absolute-offset wavefront. v1 (`ACEJAX02`)
+archives deserialize unchanged with an empty anchor table.
 """
 from __future__ import annotations
 
@@ -139,10 +148,20 @@ class Archive:
     block_fnv: np.ndarray         # u64[n_blocks] digest of decoded block (8B-stride)
     file_fnv: int                 # digest over block digests
     offset_bytes: int = 2         # bytes per offset plane count ("ra"=2, "global"=8)
+    anchor_interval: int = 0      # blocks between wavefront restart points
+                                  # (0 = anchor-free v1 semantics)
+    anchors: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+                                  # i64[n_anchors] anchor block ids, sorted,
+                                  # anchors[0] == 0 when non-empty
 
     @property
     def n_blocks(self) -> int:
         return int(self.block_start.shape[0])
+
+    @property
+    def n_anchors(self) -> int:
+        return int(self.anchors.shape[0])
 
     @property
     def compressed_bytes(self) -> int:
@@ -157,6 +176,7 @@ class Archive:
                 + self.block_start.size * 8
                 + self.block_len.size * 4
                 + self.block_fnv.size * 8
+                + self.anchors.size * 8
                 + 64)  # fixed header
 
     @property
@@ -164,13 +184,16 @@ class Archive:
         return self.raw_size / max(1, self.compressed_bytes)
 
 
-MAGIC = b"ACEJAX02"
+MAGIC_V1 = b"ACEJAX02"            # anchor-free layout (no anchor tail)
+MAGIC = b"ACEJAX03"               # v2: v1 layout + anchor table tail
 
 
 def serialize(a: Archive) -> bytes:
     """Flat binary serialization. All size/offset fields are u64 — the
     paper §5 overflow fix (u32 size fields migrated to 64-bit) is enforced
-    at the format level."""
+    at the format level. Writes the v2 (`ACEJAX03`) layout: the v1 body
+    followed by the anchor table (interval + anchor block ids), so a v2
+    reader accepts v1 archives by stopping at the shorter body."""
     import struct
     head = struct.pack(
         "<8sQQQQB3xB3xQ",
@@ -188,6 +211,11 @@ def serialize(a: Archive) -> bytes:
         raw = np.ascontiguousarray(arr, dtype=dt).tobytes()
         parts.append(struct.pack("<Q", len(raw)))
         parts.append(raw)
+    # v2 anchor tail: interval, then the anchor block-id array
+    parts.append(struct.pack("<Q", a.anchor_interval))
+    raw = np.ascontiguousarray(a.anchors, dtype=np.int64).tobytes()
+    parts.append(struct.pack("<Q", len(raw)))
+    parts.append(raw)
     return b"".join(parts)
 
 
@@ -204,8 +232,9 @@ def deserialize(buf: bytes) -> Archive:
     head = take(struct.calcsize("<8sQQQQB3xB3xQ"))
     magic, block_size, raw_size, n_blocks, n_words_total, mode_b, ent_b, file_fnv = \
         struct.unpack("<8sQQQQB3xB3xQ", head)
-    if magic != MAGIC:
+    if magic not in (MAGIC, MAGIC_V1):
         raise ValueError(f"bad magic {magic!r}")
+    version = 2 if magic == MAGIC else 1
     (offset_bytes,) = struct.unpack("<Q", take(8))
 
     def arr(dt, shape):
@@ -223,6 +252,12 @@ def deserialize(buf: bytes) -> Archive:
     block_start = arr(np.int64, (n_blocks,))
     block_len = arr(np.int32, (n_blocks,))
     block_fnv = arr(np.uint64, (n_blocks,))
+    if version >= 2:
+        (anchor_interval,) = struct.unpack("<Q", take(8))
+        anchors = arr(np.int64, (-1,))
+    else:                           # v1: anchor-free by definition
+        anchor_interval = 0
+        anchors = np.zeros(0, np.int64)
     return Archive(
         block_size=block_size, raw_size=raw_size,
         mode={0: "ra", 1: "global"}[mode_b],
@@ -231,4 +266,5 @@ def deserialize(buf: bytes) -> Archive:
         n_syms=n_syms, lanes=lanes, n_cmds=n_cmds, block_start=block_start,
         block_len=block_len, block_fnv=block_fnv, file_fnv=file_fnv,
         offset_bytes=int(offset_bytes),
+        anchor_interval=int(anchor_interval), anchors=anchors,
     )

@@ -92,7 +92,10 @@ def _fetch_dev_core(arrays, b0, local, lengths, end_blk, da_meta, backend,
                            size=u_cap, fill_value=0)
     mode = da_meta[5]
     if mode == "global":
-        # wavefront archives decode whole-prefix by construction
+        # anchor-free wavefront archives decode whole-prefix by
+        # construction (checkpointed wavefronts never reach this core:
+        # DeviceExecutor routes them through the staged path, where the
+        # decoder bounds the decode to per-plan anchor windows)
         flat = _decode_sel_core(arrays, jnp.arange(n_blocks, dtype=jnp.int32),
                                 da_meta, backend)
         rows = flat.reshape(n_blocks, block_size)[uniq]

@@ -32,6 +32,15 @@ def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
     Returns (len(sel), block_size) u8, sharded over axes on dim 0. `sel` is
     padded to a multiple of the axis size (dup blocks, cropped after).
     """
+    if dec.da.mode == "global":
+        # a shard's selection is an arbitrary block subset, but global
+        # (wavefront) decode resolves matches through a contiguous window
+        # — sharding it blockwise would silently rebase offsets against
+        # the wrong window base and return garbage rows
+        raise NotImplementedError(
+            'sharded decode supports "ra" archives only; global/wavefront '
+            "selections decode through contiguous (anchor) windows — use "
+            "DeviceExecutor/StreamingExecutor for global archives")
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     sel = np.asarray(sel, np.int32)
     n = sel.shape[0]

@@ -9,6 +9,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweeps/property tests — skipped by the CI "
+        "fast lane (scripts/ci.sh --fast runs -m 'not slow'), always run "
+        "by the full lane")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

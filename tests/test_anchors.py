@@ -1,0 +1,296 @@
+"""Checkpointed wavefronts: anchor tables, bounded global random access.
+
+The paper's headline contribution — position-invariant random access —
+did not hold for "global" (wavefront) archives: any query forced a
+whole-prefix decode. Anchors restore it: every `anchor_interval` blocks
+the match window restarts, so any block range decodes from its governing
+anchor. These tests pin down the three invariants:
+
+  1. bit-identity: anchor-window decode == whole-prefix decode == raw,
+  2. boundedness: a point query decodes <= anchor_interval + covering
+     span blocks, never the prefix,
+  3. format compatibility: v2 archives roundtrip the anchor table and
+     v1 (`ACEJAX02`, anchor-free) archives still deserialize.
+"""
+import numpy as np
+import pytest
+
+from repro.core import decoder as dec
+from repro.core import encoder as enc
+from repro.core import format as fmt
+
+
+BS = 4096
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    from repro.data.fastq import make_fastq
+    return make_fastq("platinum", n_reads=300, seed=3)
+
+
+# ------------------------------------------------------------- roundtrip
+@pytest.mark.parametrize("anchor_interval", [1, 4, 0])
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+def test_anchor_roundtrip_sweep(corpus, anchor_interval, entropy):
+    """anchor_interval ∈ {1, 4, no-anchors} × entropy {rans, raw}:
+    whole-file decode is bit-perfect and the anchor table matches."""
+    ref = np.frombuffer(corpus, np.uint8)
+    a = enc.encode(corpus, block_size=BS, mode="global", entropy=entropy,
+                   anchor_interval=anchor_interval)
+    if anchor_interval:
+        want = np.arange(0, a.n_blocks, anchor_interval)
+        assert np.array_equal(a.anchors, want)
+        assert a.anchor_interval == anchor_interval
+    else:
+        assert a.n_anchors == 0 and a.anchor_interval == 0
+    out = dec.Decoder(a, backend="ref").decode_all()
+    assert np.array_equal(out, ref), (anchor_interval, entropy)
+
+
+def test_anchor_window_decode_bit_identical_to_prefix(corpus):
+    """Every single block of an anchored archive decodes through its
+    anchor window bit-identically to the whole-prefix decode of the same
+    data encoded anchor-free — the §4 position-invariance claim extended
+    to global mode."""
+    ref = np.frombuffer(corpus, np.uint8)
+    a = enc.encode(corpus, block_size=BS, mode="global", anchor_interval=4)
+    d = dec.Decoder(a, backend="ref")
+    for b in range(a.n_blocks):
+        row = np.asarray(d.decode_blocks(np.array([b])))[0]
+        s, ln = int(a.block_start[b]), int(a.block_len[b])
+        assert np.array_equal(row[:ln], ref[s:s + ln]), f"block {b}"
+        assert d.decoded_blocks_last <= 4 + 1, (b, d.decoded_blocks_last)
+
+
+def test_point_query_decodes_only_anchor_window(corpus):
+    """The acceptance bound: a global-mode point query decodes at most
+    anchor_interval + covering-span blocks — NOT the whole prefix — and
+    decode_from_anchor returns the same bytes as the full decode."""
+    ref = np.frombuffer(corpus, np.uint8)
+    interval = 4
+    a = enc.encode(corpus, block_size=BS, mode="global",
+                   anchor_interval=interval)
+    assert a.n_blocks > interval + 2, "corpus too small to prove the bound"
+    d = dec.Decoder(a, backend="ref")
+    b = a.n_blocks - 2                  # deep block: prefix would be ~all
+    row = np.asarray(d.decode_blocks(np.array([b])))[0]
+    assert d.decoded_blocks_last <= interval + 1
+    assert d.decoded_blocks_last < a.n_blocks
+    s, ln = int(a.block_start[b]), int(a.block_len[b])
+    assert np.array_equal(row[:ln], ref[s:s + ln])
+
+    rows = np.asarray(d.decode_from_anchor(b, b))
+    assert rows.shape == (1, BS)
+    assert np.array_equal(rows[0, :ln], ref[s:s + ln])
+    assert d.decoded_blocks_last <= interval
+
+    # scattered multi-window selection: decode work is the summed windows
+    sel = np.array([1, b, 5])
+    got = np.asarray(d.decode_blocks(sel))
+    for i, blk in enumerate(sel):
+        s, ln = int(a.block_start[blk]), int(a.block_len[blk])
+        assert np.array_equal(got[i, :ln], ref[s:s + ln]), f"block {blk}"
+    assert d.decoded_blocks_last < a.n_blocks
+
+
+def test_decode_from_anchor_ra_rejected(corpus):
+    a = enc.encode(corpus[:30_000], block_size=BS, mode="ra")
+    with pytest.raises(ValueError, match="global"):
+        dec.Decoder(a, backend="ref").decode_from_anchor(0, 0)
+    with pytest.raises(ValueError, match="anchor_interval"):
+        enc.encode(corpus[:30_000], block_size=BS, mode="ra",
+                   anchor_interval=4)
+
+
+def test_mode1_anchor_windows_match_mode2(corpus):
+    """Host-entropy (Mode 1) decode of a scattered anchored selection
+    equals the device (Mode 2) path — both group by anchor window."""
+    a = enc.encode(corpus, block_size=BS, mode="global", anchor_interval=4)
+    d = dec.Decoder(a, backend="ref")
+    sel = np.array([11, 2, 7, 2])
+    m2 = np.asarray(d.decode_blocks(sel))
+    m1 = np.asarray(d.decode_blocks_host_entropy(sel))
+    assert np.array_equal(m1, m2)
+    assert d.decoded_blocks_last < a.n_blocks
+
+
+# --------------------------------------------------------------- format
+def test_serialization_roundtrips_anchor_table(corpus):
+    a = enc.encode(corpus, block_size=BS, mode="global", anchor_interval=4)
+    b = fmt.deserialize(fmt.serialize(a))
+    assert b.anchor_interval == 4
+    assert np.array_equal(b.anchors, a.anchors)
+    assert b.anchors.dtype == np.int64
+    ref = np.frombuffer(corpus, np.uint8)
+    d = dec.Decoder(b, backend="ref")
+    assert np.array_equal(d.decode_all(), ref)
+    # the deserialized archive still seeks through windows, not the prefix
+    np.asarray(d.decode_blocks(np.array([b.n_blocks - 1])))
+    assert d.decoded_blocks_last <= 4 + 1
+
+
+def test_v1_archive_deserializes_anchor_free(corpus):
+    """Regression: pre-anchor (`ACEJAX02`) archives — the v2 body minus
+    the anchor tail — must deserialize to an anchor-free archive that
+    decodes bit-perfectly."""
+    data = corpus[:50_000]
+    a = enc.encode(data, block_size=BS)
+    buf = fmt.serialize(a)
+    assert buf[:8] == fmt.MAGIC
+    # v1 layout == v2 layout minus the 16-byte empty anchor tail
+    v1 = fmt.MAGIC_V1 + buf[8:-16]
+    b = fmt.deserialize(v1)
+    assert b.anchor_interval == 0 and b.n_anchors == 0
+    assert np.array_equal(dec.Decoder(b, backend="ref").decode_all(),
+                          np.frombuffer(data, np.uint8))
+    with pytest.raises(ValueError, match="bad magic"):
+        fmt.deserialize(b"ACEJAX99" + buf[8:])
+
+
+# ---------------------------------------------------------- query plane
+def test_query_plane_global_anchored_end_to_end(corpus):
+    """GenomicArchive over an anchored global archive: point queries are
+    bit-identical to raw, decode only their window, and repeated reads hit
+    the device block cache without any new decode launch."""
+    from repro.api import GenomicArchive
+    ref = np.frombuffer(corpus, np.uint8)
+    ga = GenomicArchive.from_bytes(corpus, block_size=BS, mode="global",
+                                   anchor_interval=4, cache_blocks=8)
+    d = ga.store.decoder
+    lo = (d.da.n_blocks - 2) * BS
+    np.testing.assert_array_equal(ga[lo:lo + 100], ref[lo:lo + 100])
+    assert d.decoded_blocks_last <= 4 + 1
+    launches = ga.cache_info()["decode_launches"]
+    np.testing.assert_array_equal(ga[lo:lo + 100], ref[lo:lo + 100])
+    assert ga.cache_info()["decode_launches"] == launches   # pure cache hit
+    assert ga.cache_info()["hits"] > 0
+    # read-id addressing rides the same windows
+    np.testing.assert_array_equal(ga[7], ref[_read_span(corpus, 7)])
+
+
+def _read_span(data: bytes, rid: int) -> slice:
+    from repro.core.index import parse_fastq_records
+    starts, _ = parse_fastq_records(data)
+    return slice(int(starts[rid]), int(starts[rid + 1]))
+
+
+def test_plan_anchor_window_math(corpus):
+    """DecodePlan.anchor_windows / anchor_decode_blocks: the per-plan
+    window accounting the executors and budget paths consume."""
+    from repro.api import GenomicArchive
+    ga = GenomicArchive.from_bytes(corpus, block_size=BS, mode="global",
+                                   anchor_interval=4)
+    a = ga.store.decoder.archive
+    b = a.n_blocks - 2
+    plan = ga.planner.plan_spans(np.array([b * BS]), np.array([100]))
+    wins = plan.anchor_windows(a.anchors)
+    assert len(wins) == 1
+    first, last, _ = wins[0]
+    assert first in a.anchors and first <= b <= last
+    assert plan.anchor_decode_blocks(a.anchors) <= 4 + 1
+    # the cost prediction matches what the execution actually decodes
+    ga.executor.run(plan)
+    assert (plan.anchor_decode_blocks(a.anchors)
+            == ga.store.decoder.decoded_blocks_last)
+    # anchor-free: one window rooted at block 0 — the whole covering prefix
+    assert plan.anchor_decode_blocks(np.zeros(0, np.int64)) == last + 1
+
+
+def test_sharded_decode_rejects_global(corpus):
+    """Sharding splits a selection into arbitrary subsets; global decode
+    needs contiguous windows — must refuse loudly, not return garbage."""
+    from repro.core.sharded_decode import sharded_decode_blocks
+    a = enc.encode(corpus[:30_000], block_size=BS, mode="global",
+                   anchor_interval=4)
+    d = dec.Decoder(a, backend="ref")
+    with pytest.raises(NotImplementedError, match="ra"):
+        sharded_decode_blocks(d, np.array([0]), mesh=None)
+
+
+# ----------------------------------------------------------- streaming
+def test_streaming_budget_holds_for_anchored_global(corpus):
+    """Checkpointed wavefronts CAN honor a streaming budget (anchor-free
+    global cannot): whole-archive scan under a budget of two windows,
+    every chunk's decoded rows + gather output within budget."""
+    from repro.api.address import ByteRange
+    from repro.api.executors import StreamingExecutor
+    from repro.api import GenomicArchive
+    ref = np.frombuffer(corpus, np.uint8)
+    ga = GenomicArchive.from_bytes(corpus, block_size=BS, mode="global",
+                                   anchor_interval=4)
+    budget = 8 * BS
+    ex = StreamingExecutor(ga.store, max_resident_bytes=budget,
+                           planner=ga.planner)
+    chunks = list(ex.chunks([ByteRange(0, ga.raw_size)]))
+    assert len(chunks) > 1
+    np.testing.assert_array_equal(np.concatenate(chunks), ref)
+    for st in ex.chunk_log:
+        assert st.resident_bytes <= budget, st
+    # budget below one anchor window is rejected up front
+    with pytest.raises(ValueError, match="max_resident_bytes"):
+        StreamingExecutor(ga.store, max_resident_bytes=4 * BS)
+    # an interval beyond n_blocks bounds the requirement at the archive
+    from repro.core.residency import CompressedResidentStore
+    tiny_a = enc.encode(corpus[:5 * BS], block_size=BS, mode="global",
+                        anchor_interval=999)
+    tiny = CompressedResidentStore(tiny_a, backend="ref")
+    StreamingExecutor(tiny, max_resident_bytes=2 * tiny_a.n_blocks * BS)
+    # anchor-free global decodes the whole prefix per chunk: sub-archive
+    # budgets are rejected up front, whole-archive budgets are honored
+    free = GenomicArchive.from_bytes(corpus, block_size=BS, mode="global")
+    n = free.store.decoder.da.n_blocks
+    with pytest.raises(ValueError, match="anchor-free global"):
+        StreamingExecutor(free.store, max_resident_bytes=(n - 1) * BS)
+    ex_free = StreamingExecutor(free.store,
+                                max_resident_bytes=2 * (n + 1) * BS)
+    got = np.concatenate(list(ex_free.chunks([ByteRange(0, free.raw_size)])))
+    np.testing.assert_array_equal(got, ref)
+    for st in ex_free.chunk_log:
+        assert st.resident_bytes <= 2 * (n + 1) * BS, st
+
+
+def test_streaming_verify_clean_and_corrupt(corpus):
+    """StreamingExecutor(verify=True): per-block digests checked on device
+    before rows are cropped to spans; a corrupted entropy word raises
+    BlockDigestError naming the true block id, clean archives stream
+    bit-perfectly (both `ra` and anchored global)."""
+    from repro.api.address import ByteRange
+    from repro.api.executors import StreamingExecutor
+    from repro.core.residency import CompressedResidentStore
+    from repro.core.index import ReadIndex, parse_fastq_records
+    ref = np.frombuffer(corpus, np.uint8)
+    starts, _ = parse_fastq_records(corpus)
+
+    def build(mode, **kw):
+        a = enc.encode(corpus, block_size=BS, mode=mode, **kw)
+        idx = ReadIndex(starts=starts, block_size=BS)
+        return a, CompressedResidentStore(a, idx, backend="ref")
+
+    for mode, kw in (("ra", {}), ("global", {"anchor_interval": 4})):
+        a, store = build(mode, **kw)
+        ex = StreamingExecutor(store, max_blocks_per_chunk=3, verify=True)
+        got = np.concatenate(list(ex.chunks([ByteRange(0, len(corpus))])))
+        np.testing.assert_array_equal(got, ref)
+
+    # corrupt one literal word of block 2 → the chunk containing block 2
+    # fails with the true block id; earlier chunks still stream
+    a, store = build("ra")
+    a.words = a.words.copy()
+    a.words[int(a.word_off[2, fmt.S_LITERALS]) + 1] ^= 0x5A
+    store = CompressedResidentStore(
+        a, ReadIndex(starts=starts, block_size=BS), backend="ref")
+    ex = StreamingExecutor(store, max_blocks_per_chunk=2, verify=True)
+    from repro.api.address import ByteRange as BR
+    it = ex.chunks([BR(0, len(corpus))])
+    first = next(it)                       # blocks 0-1: clean
+    np.testing.assert_array_equal(first, ref[:len(first)])
+    with pytest.raises(dec.BlockDigestError, match="block 2"):
+        list(it)
+    # facade passthrough
+    from repro.api import GenomicArchive
+    ga = GenomicArchive.from_bytes(corpus, block_size=BS)
+    got = np.concatenate(list(
+        ga.stream([BR(0, ga.raw_size)], max_resident_bytes=6 * BS,
+                  verify=True)))
+    np.testing.assert_array_equal(got, ref)

@@ -1,0 +1,135 @@
+"""scripts/bench_compare.py — the CI bench-regression gate, unit-tested
+with synthetic snapshots (no real benchmarks run here)."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SCRIPT = os.path.join(REPO, "scripts", "bench_compare.py")
+
+
+def snap(path, rows, calib=1000.0):
+    path.write_text(json.dumps({
+        "meta": {"calib_us": calib},
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, *rest in rows
+                 for d in [rest[0] if rest else ""]],
+    }))
+    return str(path)
+
+
+def run(*args):
+    p = subprocess.run([sys.executable, SCRIPT, *args],
+                       capture_output=True, text=True)
+    return p.returncode, p.stdout + p.stderr
+
+
+def test_gate_passes_within_threshold(tmp_path):
+    base = snap(tmp_path / "b.json", [("a/x", 1000.0), ("a/y", 500.0)])
+    cur = snap(tmp_path / "c.json", [("a/x", 1100.0), ("a/y", 400.0)])
+    code, out = run(base, cur)
+    assert code == 0, out
+    assert "OK" in out
+
+
+def test_gate_fails_beyond_threshold(tmp_path):
+    base = snap(tmp_path / "b.json", [("a/x", 1000.0)])
+    cur = snap(tmp_path / "c.json", [("a/x", 1300.0)])
+    code, out = run(base, cur)
+    assert code == 1
+    assert "SLOWER" in out and "a/x" in out
+
+
+def test_calibration_cancels_machine_drift(tmp_path):
+    """A uniformly 2x slower machine (calib 2x slower too) is NOT a
+    regression; the same row times with an unchanged calib ARE."""
+    base = snap(tmp_path / "b.json", [("a/x", 1000.0)], calib=1000.0)
+    slow_machine = snap(tmp_path / "m.json", [("a/x", 2000.0)], calib=2000.0)
+    code, out = run(base, slow_machine)
+    assert code == 0, out
+    slow_code = snap(tmp_path / "r.json", [("a/x", 2000.0)], calib=1000.0)
+    code, out = run(base, slow_code)
+    assert code == 1, out
+
+
+def test_tiny_rows_are_jitter_exempt(tmp_path):
+    base = snap(tmp_path / "b.json", [("a/tiny", 10.0)])
+    cur = snap(tmp_path / "c.json", [("a/tiny", 40.0)])   # 4x but < 50us
+    code, out = run(base, cur)
+    assert code == 0
+    assert "jitter" in out
+
+
+def test_new_rows_report_but_do_not_gate(tmp_path):
+    base = snap(tmp_path / "b.json", [("a/x", 1000.0)])
+    cur = snap(tmp_path / "c.json", [("a/x", 1000.0), ("a/new", 9e9)])
+    code, out = run(base, cur)
+    assert code == 0
+    assert "NEW" in out and "a/new" in out
+
+
+def test_update_folds_and_preserves_noise_bands(tmp_path):
+    """--update must FOLD the run into the baseline, not replace it: a raw
+    snapshot has no spread fields, and copying it over would collapse
+    every measured noise band to the base threshold."""
+    r1 = snap(tmp_path / "r1.json", [("a/noisy", 1000.0)])
+    r2 = snap(tmp_path / "r2.json", [("a/noisy", 2000.0)])
+    baseline = str(tmp_path / "base.json")
+    run("--merge", baseline, r1, r2)
+    cur = snap(tmp_path / "c.json", [("a/noisy", 1100.0),
+                                     ("a/extra", 700.0)])
+    code, out = run(baseline, cur, "--update")
+    assert code == 0, out
+    merged = json.loads((tmp_path / "base.json").read_text())
+    by = {r["name"]: r for r in merged["rows"]}
+    assert by["a/noisy"]["spread"] == 1.0          # band survived
+    assert by["a/noisy"]["us_per_call"] == 1000.0  # min survived
+    assert by["a/extra"]["us_per_call"] == 700.0   # new row joined
+    # a run inside the preserved band still passes
+    code, out = run(baseline, snap(tmp_path / "c2.json",
+                                   [("a/noisy", 1900.0),
+                                    ("a/extra", 710.0)]))
+    assert code == 0, out
+
+
+def test_update_folds_calibration_normalized_times(tmp_path):
+    """Folding must use calibration-normalized times: a 2x slower machine
+    reporting 2x times (zero real change) must not widen the noise band
+    or move the baseline's calibration reference."""
+    b1 = snap(tmp_path / "b1.json", [("a/x", 1000.0)], calib=1000.0)
+    baseline = str(tmp_path / "base.json")
+    run("--merge", baseline, b1)
+    cur = snap(tmp_path / "c.json", [("a/x", 2000.0)], calib=2000.0)
+    code, out = run(baseline, cur, "--update")
+    assert code == 0, out
+    merged = json.loads((tmp_path / "base.json").read_text())
+    row_ = {r["name"]: r for r in merged["rows"]}["a/x"]
+    assert row_["us_per_call"] == 1000.0
+    assert row_["spread"] == 0.0
+    assert merged["meta"]["calib_us"] == 1000.0
+
+
+def test_merge_records_min_and_spread_then_gates_with_band(tmp_path):
+    """--merge keeps the per-row best across runs and the observed spread;
+    a later run inside the spread band passes, beyond it fails."""
+    r1 = snap(tmp_path / "r1.json", [("a/noisy", 1000.0), ("a/stable", 800.0)])
+    r2 = snap(tmp_path / "r2.json", [("a/noisy", 2000.0), ("a/stable", 820.0)])
+    baseline = str(tmp_path / "base.json")
+    code, out = run("--merge", baseline, r1, r2)
+    assert code == 0, out
+    merged = json.loads((tmp_path / "base.json").read_text())
+    by = {r["name"]: r for r in merged["rows"]}
+    assert by["a/noisy"]["us_per_call"] == 1000.0
+    assert by["a/noisy"]["spread"] == 1.0
+    assert by["a/stable"]["spread"] == 0.025
+    # noisy row: +120% < 1.0 * 1.5 margin -> passes; stable row at +30%
+    # exceeds its tight 25% gate -> fails
+    ok = snap(tmp_path / "ok.json", [("a/noisy", 2200.0), ("a/stable", 810.0)])
+    code, out = run(baseline, ok)
+    assert code == 0, out
+    bad = snap(tmp_path / "bad.json",
+               [("a/noisy", 1100.0), ("a/stable", 1040.0)])
+    code, out = run(baseline, bad)
+    assert code == 1
+    assert "a/stable" in out and "a/noisy" not in out.split("SLOWER")[1]

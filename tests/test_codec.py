@@ -34,6 +34,7 @@ def test_roundtrip_edge_cases(payload):
     assert roundtrip(payload, block_size=2048)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(data=st.binary(min_size=1, max_size=30_000),
        block_size=st.sampled_from([512, 2048, 16384]))
@@ -129,6 +130,7 @@ def test_small_block_keeps_two_offset_planes(fastq_platinum):
     assert a.offset_bytes == 2
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        unit_len=st.integers(1_000, 80_000),

@@ -38,6 +38,7 @@ def _setup(tmp_path):
     return step, state, dl, ck
 
 
+@pytest.mark.slow
 def test_restart_after_injected_failure(tmp_path):
     step, state, dl, ck = _setup(tmp_path)
     fails = {"n": 0}

@@ -8,6 +8,10 @@ import pytest
 from repro.configs import ALL_ARCHS, all_configs, get_config
 from repro.models.registry import build_model
 
+# one train step per architecture family: correctness-critical but ~60 s
+# of pure model compile time — full lane only
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B=2, S=32):
     tokens = (jnp.arange(B * S).reshape(B, S) * 7 % cfg.vocab).astype(

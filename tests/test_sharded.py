@@ -43,6 +43,7 @@ def test_sharded_decode_bit_perfect():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_manual_dp_step_with_compression():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

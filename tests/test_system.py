@@ -23,6 +23,7 @@ from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step
 
 
+@pytest.mark.slow
 def test_end_to_end_compressed_resident_lifecycle(tmp_path):
     corpus = make_fastq("platinum", n_reads=500, seed=11)
     cfg = get_config("qwen2-1.5b").reduced()
