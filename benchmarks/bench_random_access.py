@@ -4,12 +4,34 @@ Reproduces the paper's two findings: (1) single-block seek is orders of
 magnitude cheaper than full decode; (2) 1-block and 100-block seeks cost
 almost the same — latency is dominated by fixed dispatch overhead, i.e.
 seek cost is size-INdependent at small ranges.
+
+Depth-bounded resolution rows (`ACEJAX04`): every decode here runs
+exactly the archive's recorded chain depth in resolve rounds instead of
+⌈log2(block)⌉ — `ra/*` derived fields record `max_depth` and the rounds
+saved, `ra/legacy_early_exit` times the depth-free (early-exit while
+loop) path old archives take, and `ra/stage_entropy` / `ra/stage_match`
+split the pipeline so future perf PRs can attribute wins to the right
+stage. `ra/decode_GBps` measures full decode at the paper-1 1 MiB block
+size, where the log-N worst case was 20 rounds.
 """
+import dataclasses
+
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from benchmarks.common import corpora, row, time_fn
+from repro.core import decoder as dmod
 from repro.core import encoder
 from repro.core.decoder import Decoder
+from repro.core.format import PAPER1_BLOCK_SIZE
+from repro.kernels.ref import log2_rounds
+
+
+def _depth_tag(a) -> str:
+    saved = log2_rounds(a.block_size) - a.max_depth
+    return f"max_depth={a.max_depth};rounds_saved={saved}"
 
 
 def main(small: bool = False):
@@ -21,7 +43,37 @@ def main(small: bool = False):
     sel_all = np.arange(a.n_blocks)
     t_full = time_fn(lambda: d.decode_blocks(sel_all), iters=3)
     row("ra/full_decode", t_full,
-        f"{len(buf)/t_full/1e9:.3f}GB/s(cpu);blocks={a.n_blocks}")
+        f"{len(buf)/t_full/1e9:.3f}GB/s(cpu);blocks={a.n_blocks};"
+        + _depth_tag(a))
+
+    # legacy (pre-ACEJAX04) archives carry no depth: the resolver
+    # early-exits when no pointer moves — convergence-bound, not log-N
+    legacy = Decoder(dataclasses.replace(a, block_depth=None), backend="ref")
+    t_legacy = time_fn(lambda: legacy.decode_blocks(sel_all), iters=3)
+    got = np.asarray(legacy.decode_blocks(sel_all))
+    assert np.array_equal(got, np.asarray(d.decode_blocks(sel_all)))
+    row("ra/legacy_early_exit", t_legacy,
+        f"depth_free_while_loop;vs_depth_bounded={t_legacy/t_full:.2f}x")
+
+    # per-stage split: entropy decode alone vs the full pipeline — the
+    # match phase is the depth-bounded part, so this row is what future
+    # resolver work moves
+    ent_jit = jax.jit(lambda s: dmod._entropy_decode_sel(d.da, s, "ref"))
+    sel_dev = jnp.asarray(sel_all, jnp.int32)
+    t_ent = time_fn(lambda: ent_jit(sel_dev)["literals"], iters=3)
+    t_match = max(t_full - t_ent, 0.0)
+    row("ra/stage_entropy", t_ent,
+        f"share={t_ent/t_full:.2f};blocks={a.n_blocks}")
+    row("ra/stage_match", t_match,
+        f"share={t_match/t_full:.2f};resolve_rounds={a.max_depth}")
+
+    # paper-1 settings: 1 MiB blocks, where log-N was 20 resolve rounds
+    p1 = encoder.encode(buf, block_size=PAPER1_BLOCK_SIZE)
+    dp1 = Decoder(p1, backend="ref")
+    sel_p1 = np.arange(p1.n_blocks)
+    t_p1 = time_fn(lambda: dp1.decode_blocks(sel_p1), iters=3)
+    row("ra/decode_GBps", t_p1,
+        f"{len(buf)/t_p1/1e9:.3f}GB/s(cpu);block=1MiB;" + _depth_tag(p1))
 
     one = np.array([a.n_blocks // 2])
     t1 = time_fn(lambda: d.decode_blocks(one), iters=5)
@@ -66,11 +118,13 @@ def main(small: bool = False):
     blocks_anchor = dga.decoded_blocks_last
     assert blocks_anchor <= interval + 1 < blocks_prefix
     row("ra/global_seek_whole_prefix", t_prefix,
-        f"blocks_decoded={blocks_prefix};ratio={g.ratio:.2f}")
+        f"blocks_decoded={blocks_prefix};ratio={g.ratio:.2f};"
+        f"max_depth={g.max_depth}")
     row("ra/global_seek_anchored", t_anchor,
         f"blocks_decoded={blocks_anchor};interval={interval};"
         f"speedup_vs_prefix={t_prefix/t_anchor:.1f}x;"
-        f"ratio={ga.ratio:.2f};ratio_cost={g.ratio/ga.ratio:.3f}x")
+        f"ratio={ga.ratio:.2f};ratio_cost={g.ratio/ga.ratio:.3f}x;"
+        f"max_depth={ga.max_depth}")
 
 
 if __name__ == "__main__":

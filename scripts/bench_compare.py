@@ -45,7 +45,7 @@ import sys
 
 
 def load(path: str) -> tuple:
-    """-> ({name: us}, {name: spread}, calib_us | None)."""
+    """-> ({name: us}, {name: spread}, calib_us | None, {name: derived})."""
     try:
         with open(path) as f:
             snap = json.load(f)
@@ -59,7 +59,21 @@ def load(path: str) -> tuple:
     calib = snap.get("meta", {}).get("calib_us")
     return ({r["name"]: float(r["us_per_call"]) for r in rows},
             {r["name"]: float(r.get("spread", 0.0)) for r in rows},
-            float(calib) if calib else None)
+            float(calib) if calib else None,
+            {r["name"]: r.get("derived", "") for r in rows})
+
+
+def depth_tag(name: str, derived: str) -> str:
+    """`ra/*` rows carry the archive's recorded resolve depth in their
+    derived field (`max_depth=K`); surface it next to the timing so a
+    depth regression (e.g. an encoder change producing deeper parses) is
+    visible in the gate output, not just the time it costs."""
+    if not name.startswith("ra/"):
+        return ""
+    for part in derived.split(";"):
+        if part.startswith("max_depth="):
+            return f" [{part}]"
+    return ""
 
 
 def merge(out_path: str, in_paths: list) -> int:
@@ -183,8 +197,8 @@ def main() -> int:
               file=sys.stderr)
         return 2
 
-    base, spreads, base_calib = load(args.baseline)
-    cur, _, cur_calib = load(args.current[0])
+    base, spreads, base_calib, _ = load(args.baseline)
+    cur, _, cur_calib, cur_derived = load(args.current[0])
 
     scale = 1.0
     if not args.no_calib and base_calib and cur_calib:
@@ -206,7 +220,8 @@ def main() -> int:
                       * args.spread_margin)
         delta = (c - b) / b
         line = (f"{name}: {b:.1f}us -> {c:.1f}us ({delta:+.1%}, "
-                f"allowed +{allowed:.0%})")
+                f"allowed +{allowed:.0%})"
+                + depth_tag(name, cur_derived.get(name, "")))
         if b < args.min_us:
             informational.append(line)
         elif delta > allowed:
@@ -215,13 +230,20 @@ def main() -> int:
             improved.append(line)
     new = sorted(set(cur) - set(base))
 
+    # recorded resolve depth per ra/* row (debuggability: a depth change
+    # explains a time change before anyone bisects the resolver)
+    for name in sorted(cur):
+        tag = depth_tag(name, cur_derived.get(name, ""))
+        if tag:
+            print(f"  depth    {name}: {cur[name]:.1f}us{tag}")
     for line in informational:
         print(f"  jitter   {line}")
     for line in improved:
         print(f"  FASTER   {line}")
     for name in new:
         print(f"  NEW      {name}: {cur[name]:.1f}us (not gated; refresh "
-              f"the baseline with --merge/--update to gate it)")
+              f"the baseline with --merge/--update to gate it)"
+              + depth_tag(name, cur_derived.get(name, "")))
     if regressions:
         print(f"\nbench_compare: {len(regressions)} regression(s):")
         for line in regressions:

@@ -29,7 +29,9 @@ anchor tests pin down) — while the miss-decode callback
 so a miss launch decodes at most anchor_interval + covering-span blocks
 instead of the whole prefix. That is what makes cached global reads
 non-degenerate: hits are still one buffer gather, and misses pay one
-bounded window, not the archive.
+bounded window, not the archive. The window rows the miss decode
+materialized beyond the requested blocks co-install into free slots
+(`install_extras`) so a scan over the window costs one launch total.
 """
 from __future__ import annotations
 
@@ -189,6 +191,14 @@ def _gather_slots(buf, slots):
     return buf[slots]
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _install_rows(buf, rows, src_idx, slots):
+    """Co-install scatter: window rows the decode already materialized go
+    into free slots (buffer donated → in-place; `slots == capacity`
+    padding entries drop)."""
+    return buf.at[slots].set(rows[src_idx], mode="drop")
+
+
 # ------------------------------------------------------------------- cache
 class BlockCache:
     """Preallocated (capacity, block_size) u8 device buffer + host
@@ -217,6 +227,7 @@ class BlockCache:
         self.misses = 0
         self.evictions = 0
         self.installs = 0
+        self.coinstalls = 0
         self.decode_launches = 0
 
     # --------------------------------------------------------------- stats
@@ -232,6 +243,7 @@ class BlockCache:
         return {"capacity": self.capacity, "resident": self.resident,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "installs": self.installs,
+                "coinstalls": self.coinstalls,
                 "bytes_resident": self.bytes_resident,
                 "buffer_bytes": self.capacity * self.block_size,
                 "decode_launches": self.decode_launches,
@@ -345,3 +357,35 @@ class BlockCache:
                  decode: Callable[[np.ndarray], jnp.ndarray]) -> jnp.ndarray:
         """plan + realize in one call (the store's `_rows_for_blocks`)."""
         return self.realize(self.plan(uniq), decode)
+
+    # ---------------------------------------------------------- co-install
+    def install_extras(self, blocks: np.ndarray, rows: jnp.ndarray) -> int:
+        """Opportunistically install co-decoded rows into FREE slots only.
+
+        An anchored-global miss decodes its whole [anchor, last] window
+        but a CachePlan installs only the missed blocks; handing the full
+        window here turns a sequential window scan into one decode
+        launch. Speculative rows never evict (free slots only) and leave
+        the policy's recency/frequency state untouched, so under pressure
+        they are the first victims. Returns the number installed.
+        """
+        blocks = np.asarray(blocks, np.int64).reshape(-1)
+        fresh = np.flatnonzero(self.slot_of[blocks] < 0)
+        free = np.flatnonzero(self.slot_block < 0)
+        take = fresh[:free.size]
+        if take.size == 0:
+            return 0
+        slots = free[:take.size].astype(np.int32)
+        # pad to the miss-set pow2 geometry so jit retraces stay bounded
+        src = _pad_pow2(take.astype(np.int32))
+        dst = _pad_pow2(slots, fill=self.capacity)
+        try:
+            self.buf = _install_rows(self.buf, rows, jnp.asarray(src),
+                                     jnp.asarray(dst))
+        except BaseException:
+            self.reset()        # donated buffer may be gone — never serve
+            raise               # zero rows as hits
+        self.slot_block[slots] = blocks[take]
+        self.slot_of[blocks[take]] = slots
+        self.coinstalls += int(take.size)
+        return int(take.size)

@@ -112,6 +112,11 @@ class DecodePlan:
     device_ids: Optional[np.ndarray] = None   # i32[Bp]: whole-record ids —
                                   # covering set resolves from the DEVICE
                                   # start table (the fetch_reads fast path)
+    max_depth: Optional[int] = None  # archive's recorded resolve-round
+                                  # bound (v3 depth metadata; None =
+                                  # legacy early-exit decode) — telemetry/
+                                  # cost prediction, the decode kernels
+                                  # read it from the DeviceArchive
     _cover: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     # ------------------------------------------------------------- geometry
@@ -226,6 +231,7 @@ class QueryPlanner:
         self.block_size = da.block_size
         self.n_blocks = da.n_blocks
         self.raw_size = da.raw_size
+        self.max_depth = da.max_depth
 
     # ------------------------------------------------------------ fast paths
     def plan_read_ids(self, ids: np.ndarray) -> DecodePlan:
@@ -249,7 +255,7 @@ class QueryPlanner:
             starts=starts, lengths=lengths, n_queries=ids.size,
             block_size=self.block_size, n_blocks=self.n_blocks,
             max_len=self.store._max_len, max_span=self.store._max_span,
-            device_ids=dev_ids.astype(np.int32))
+            device_ids=dev_ids.astype(np.int32), max_depth=self.max_depth)
 
     def plan_records(self, ids: np.ndarray, record_bytes: int) -> DecodePlan:
         """Fixed-size records: arithmetic spans, no index needed (the
@@ -268,7 +274,8 @@ class QueryPlanner:
             starts=starts, lengths=lengths, n_queries=ids.size,
             block_size=self.block_size, n_blocks=self.n_blocks,
             max_len=record_bytes,
-            max_span=record_bytes // self.block_size + 2)
+            max_span=record_bytes // self.block_size + 2,
+            max_depth=self.max_depth)
 
     def plan_spans(self, starts: np.ndarray, lengths: np.ndarray,
                    max_len: Optional[int] = None) -> DecodePlan:
@@ -300,7 +307,7 @@ class QueryPlanner:
         return DecodePlan(
             starts=starts, lengths=lengths, n_queries=n,
             block_size=self.block_size, n_blocks=self.n_blocks,
-            max_len=max_len, max_span=max_span)
+            max_len=max_len, max_span=max_span, max_depth=self.max_depth)
 
     # -------------------------------------------------------------- general
     def resolve(self, addrs: Sequence[Address]

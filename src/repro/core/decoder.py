@@ -32,6 +32,18 @@ class BlockDigestError(ValueError):
     """A decoded block's FNV-1a-64 digest does not match the archive's."""
 
 
+def _check_window_bytes(first: int, last: int, block_size: int) -> None:
+    """Both global window decodes (mode 1 and mode 2) resolve matches in
+    ONE flat int32 pointer space — a window spanning >= 2 GiB must be a
+    loud error, not silent position overflow."""
+    if (last - first + 1) * block_size >= 2**31:
+        raise ValueError(
+            f"decode window [{first}, {last}] spans "
+            f"{(last - first + 1) * block_size} bytes >= 2 GiB — the flat "
+            f"pointer space is int32; decode narrower ranges (or re-encode "
+            f"with a smaller anchor_interval)")
+
+
 # --------------------------------------------------------------- device form
 @dataclasses.dataclass
 class DeviceArchive:
@@ -42,7 +54,11 @@ class DeviceArchive:
     n_syms: jnp.ndarray         # i32[n_blocks, 4]
     lanes: jnp.ndarray          # i32[n_blocks, 4]
     n_cmds: jnp.ndarray         # i32[n_blocks]
-    block_start: jnp.ndarray    # i32[n_blocks] (device path addresses < 2^31)
+    block_start: jnp.ndarray    # i32[n_blocks] — low 32 bits of the 64-bit
+                                # absolute starts (wraparound semantics:
+                                # window rebasing subtracts in i32, which
+                                # is exact for any base because windows
+                                # span < 2^31 bytes)
     block_len: jnp.ndarray      # i32[n_blocks]
     freqs: np.ndarray           # host (tables are rebuilt on device per call)
     block_size: int
@@ -56,6 +72,9 @@ class DeviceArchive:
     offset_bytes: int
     anchor_interval: int = 0    # wavefront restart spacing (0 = anchor-free)
     anchors: Optional[np.ndarray] = None   # host i64 anchor block ids
+    max_depth: Optional[int] = None  # archive-wide resolve-round bound
+                                 # (jit-static; None = legacy depth-free)
+    block_depth: Optional[np.ndarray] = None  # host i32 per-block depths
 
     @property
     def device_bytes(self) -> int:
@@ -75,12 +94,23 @@ def to_device(a: Archive) -> DeviceArchive:
 
     lit_cols = np.array([S_LITERALS])
     cmd_cols = np.array([S_LENGTHS, S_OFFSETS, S_COMMANDS])
+    if (a.mode == "global" and np.asarray(a.anchors).size == 0
+            and a.raw_size >= 2**31):
+        # anchor-free wavefront decode materializes ONE raw_size-byte flat
+        # pointer space — past 2 GiB that cannot fit int32 positions, and
+        # before this guard the offsets silently truncated to 31 bits
+        raise ValueError(
+            f"anchor-free global archive spans {a.raw_size} bytes >= 2 GiB"
+            f" — whole-prefix decode needs an int32 flat pointer space; "
+            f"re-encode with anchor_interval to bound decode windows")
     return DeviceArchive(
         words=jnp.asarray(a.words),
         word_off=jnp.asarray(a.word_off.astype(np.int32)),
         n_syms=jnp.asarray(a.n_syms),
         lanes=jnp.asarray(a.lanes),
         n_cmds=jnp.asarray(a.n_cmds),
+        # astype(int32) keeps the LOW 32 BITS (wraparound) — exactly what
+        # window-relative i32 rebasing needs for archives past 2 GiB
         block_start=jnp.asarray(a.block_start.astype(np.int32)),
         block_len=jnp.asarray(a.block_len),
         freqs=np.asarray(a.freqs),
@@ -95,6 +125,9 @@ def to_device(a: Archive) -> DeviceArchive:
         offset_bytes=int(a.offset_bytes),
         anchor_interval=int(a.anchor_interval),
         anchors=np.asarray(a.anchors, np.int64),
+        max_depth=a.max_depth,
+        block_depth=(np.asarray(a.block_depth, np.int32)
+                     if a.block_depth is not None else None),
     )
 
 
@@ -125,31 +158,43 @@ def _u16_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
     return jnp.where(j < n_cmds[:, None], v, 0)
 
 
-def _u32_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
-                     max_cmds: int) -> jnp.ndarray:
-    """First-4-plane little-endian u32 → (B, max_cmds) i32 (top bit masked:
-    device decode addresses stay < 2^31). Decodes the 4-plane block-local
-    offsets of `offset_bytes=4` archives (block_size > 0xFFFF, where two
-    planes would truncate) and, as `_u64lo_from_planes`, the low word of
-    8-plane global offsets."""
+def _planes_lo32(planes: jnp.ndarray, n_cmds: jnp.ndarray, max_cmds: int,
+                 mask_top: bool) -> jnp.ndarray:
+    """First-4-plane little-endian word → (B, max_cmds) i32; `mask_top`
+    clears bit 31 (positive addresses) vs keeping the full low 32 bits
+    (wraparound semantics)."""
     nc = n_cmds[:, None]
     j = jnp.arange(max_cmds, dtype=jnp.int32)[None, :]
     v = jnp.zeros(planes.shape[:1] + (max_cmds,), jnp.int32)
     for b in range(4):
         idx = jnp.minimum(b * nc + j, planes.shape[1] - 1)
         byte = jnp.take_along_axis(planes.astype(jnp.int32), idx, axis=1)
-        shift = 8 * b
-        if b == 3:
+        if b == 3 and mask_top:
             byte = byte & 0x7F
-        v = v | (byte << shift)
+        v = v | (byte << (8 * b))
     return jnp.where(j < nc, v, 0)
+
+
+def _u32_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
+                     max_cmds: int) -> jnp.ndarray:
+    """First-4-plane little-endian u32 → (B, max_cmds) i32 (top bit masked:
+    device decode addresses stay < 2^31). Decodes the 4-plane block-local
+    offsets of `offset_bytes=4` archives (block_size > 0xFFFF, where two
+    planes would truncate)."""
+    return _planes_lo32(planes, n_cmds, max_cmds, mask_top=True)
 
 
 def _u64lo_from_planes(planes: jnp.ndarray, n_cmds: jnp.ndarray,
                        max_cmds: int) -> jnp.ndarray:
-    """8-plane global offsets → low 31 bits as i32 (device decode addresses
-    < 2^31; the host format keeps full 64-bit)."""
-    return _u32_from_planes(planes, n_cmds, max_cmds)
+    """8-plane global offsets → FULL low 32 bits as i32 (wraparound
+    semantics, byte 3 NOT masked). The match phase rebases these against
+    the decode window's base with an i32 wraparound subtraction; since
+    the anchor guarantee bounds every match source to its window and
+    windows span < 2^31 bytes, `(off_lo32 - base_lo32) mod 2^32` equals
+    the true 64-bit difference — archives whose windows start past 2 GiB
+    rebase exactly instead of truncating to 31 bits first (which
+    corrupted them silently)."""
+    return _planes_lo32(planes, n_cmds, max_cmds, mask_top=False)
 
 
 def _entropy_decode_sel(da: DeviceArchive, sel: jnp.ndarray, backend: str):
@@ -250,26 +295,37 @@ def _entropy_decode_host(a: Archive, sel: np.ndarray):
 def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
                  block_size: int, max_cmds: int, backend: str,
                  offset_bytes: int, total_size: Optional[int] = None,
-                 win_base=0):
+                 win_base=0, n_rounds: Optional[int] = None):
+    """`n_rounds` is the archive's recorded chain depth (jit-static):
+    every resolver below runs exactly that many doubling rounds. None =
+    legacy depth-free archive — the ref resolver early-exits via
+    while_loop, pallas falls back to log2(block)."""
     from repro.kernels import ops, ref
     lit_lens = _u16_from_planes(streams["commands"], n_cmds, max_cmds)
     match_lens = _u16_from_planes(streams["lengths"], n_cmds, max_cmds)
     if offset_bytes == 2:
         offsets = _u16_from_planes(streams["offsets"], n_cmds, max_cmds)
-    else:
-        # 4-plane block-local ("ra", block_size > 0xFFFF) and 8-plane
-        # global offsets both read the first 4 planes
+    elif offset_bytes == 4:
+        # 4-plane block-local offsets ("ra", block_size > 0xFFFF)
         offsets = _u32_from_planes(streams["offsets"], n_cmds, max_cmds)
+    else:
+        # 8-plane global offsets: full low-32-bit word, wraparound
+        # semantics — rebased below BEFORE any narrowing, so windows
+        # starting past 2 GiB resolve exactly
+        offsets = _u64lo_from_planes(streams["offsets"], n_cmds, max_cmds)
 
     if da_mode == "ra":
         return ops.lz77_decode_blocks(
             lit_lens, match_lens, offsets, n_cmds, streams["literals"],
-            block_len, out_size=block_size, backend=backend)
+            block_len, out_size=block_size, backend=backend,
+            n_rounds=n_rounds)
     # global/wavefront: one flat pointer space rooted at `win_base` — the
-    # absolute byte start of the decode window (0 = whole prefix). Anchor
-    # archives guarantee every match source >= its window's anchor, so
-    # rebased pointers stay inside [0, total_size). Slots of zero-length
-    # commands go negative after rebasing but are never dereferenced
+    # low 32 bits of the decode window's absolute byte start (block 0's
+    # start when anchor-free). Anchor archives guarantee every match
+    # source >= its window's anchor and windows span < 2^31 bytes, so the
+    # i32 wraparound subtraction recovers exact window-relative pointers
+    # inside [0, total_size) for ANY 64-bit base. Slots of zero-length
+    # commands go out of range after rebasing but are never dereferenced
     # (no output byte maps into an empty match region).
     offsets = offsets - win_base
     B = lit_lens.shape[0]
@@ -277,7 +333,7 @@ def _match_phase(da_mode: str, streams, n_cmds, block_len, block_start,
     flat = ref.lz77_decode_global_ref(
         lit_lens, match_lens, offsets, n_cmds, streams["literals"],
         lit_base, block_start - win_base, block_len, out_size=block_size,
-        total_size=total_size)
+        total_size=total_size, n_rounds=n_rounds)
     return flat
 
 
@@ -286,7 +342,7 @@ def _decode_sel_core(arrays, sel, da_meta, backend):
     shard_map multi-device path). `da_meta` is the static geometry tuple;
     `arrays` the device archive pytree."""
     (block_size, n_blocks, max_cmds, t_lit, t_cmd, mode, entropy,
-     offset_bytes, total_size, freqs_t) = da_meta
+     offset_bytes, total_size, freqs_t, max_depth) = da_meta
     freqs_host = np.asarray(freqs_t, np.uint16)
     da = DeviceArchive(
         words=arrays["words"], word_off=arrays["word_off"],
@@ -295,14 +351,15 @@ def _decode_sel_core(arrays, sel, da_meta, backend):
         block_len=arrays["block_len"], freqs=freqs_host,
         block_size=block_size, n_blocks=n_blocks, raw_size=0, mode=mode,
         entropy=entropy, max_cmds=max_cmds, t_max_lit=t_lit, t_max_cmd=t_cmd,
-        offset_bytes=offset_bytes)
+        offset_bytes=offset_bytes, max_depth=max_depth)
     streams = _entropy_decode_sel(da, sel, backend)
     # global selections are contiguous decode windows (whole prefix or an
     # anchor window); the window's byte base anchors the flat pointer space
     win_base = da.block_start[sel[0]] if mode == "global" else 0
     return _match_phase(mode, streams, da.n_cmds[sel], da.block_len[sel],
                         da.block_start[sel], block_size, max_cmds, backend,
-                        offset_bytes, total_size, win_base=win_base)
+                        offset_bytes, total_size, win_base=win_base,
+                        n_rounds=max_depth)
 
 
 _decode_sel_jit = partial(jax.jit, static_argnames=("da_meta", "backend"))(
@@ -389,6 +446,15 @@ class Decoder:
         }
         self._store_view = None
         self.decoded_blocks_last = 0
+        # global mode, opt-in (collect_window_rows=True): the decode
+        # records (first_block_id, (L, block_size) rows) per anchor
+        # window it materialized, so the BlockCache can co-install them
+        # into free slots — a window miss warms every sibling block the
+        # decode already paid for. Off by default: retaining whole
+        # decoded windows on device costs real memory, and only the
+        # cache path ever consumes them.
+        self.collect_window_rows = False
+        self.last_window_rows: list = []
 
     def _api_store(self):
         """Store-shaped adapter over this decoder so the host APIs ride the
@@ -409,7 +475,7 @@ class Decoder:
                 else None
         return (da.block_size, da.n_blocks, da.max_cmds, da.t_max_lit,
                 da.t_max_cmd, da.mode, da.entropy, da.offset_bytes, total,
-                self._freqs_host)
+                self._freqs_host, da.max_depth)
 
     def verify_rows(self, sel, rows: jnp.ndarray) -> None:
         """Recompute each decoded row's 8-byte-stride FNV-1a-64 on device
@@ -438,12 +504,16 @@ class Decoder:
         (last-first+1, block_size) u8 rows. The flat pointer space is the
         window, not the archive — total_size scales with the window."""
         L = last - first + 1
+        _check_window_bytes(first, last, self.da.block_size)
         wsel = jnp.arange(first, last + 1, dtype=jnp.int32)
         flat = _decode_sel_jit(self.arrays, wsel,
                                self._meta(L, total=L * self.da.block_size),
                                self.backend)
         self.decoded_blocks_last += L
-        return flat.reshape(L, self.da.block_size)
+        rows = flat.reshape(L, self.da.block_size)
+        if self.collect_window_rows:
+            self.last_window_rows.append((first, rows))
+        return rows
 
     def _anchor_groups(self, sel_np: np.ndarray) -> list:
         from repro.api.plan import anchor_window_groups
@@ -477,6 +547,7 @@ class Decoder:
         win_first = int(anchor_floor(np.asarray([first]),
                                      self.archive.anchors)[0])
         self.decoded_blocks_last = 0
+        self.last_window_rows = []
         out = self._window_rows(win_first, last)[first - win_first:]
         if verify:
             self.verify_rows(np.arange(first, last + 1), out)
@@ -488,6 +559,7 @@ class Decoder:
         selection is grouped by governing anchor so one call never decodes
         across windows it does not need."""
         self.decoded_blocks_last = 0
+        self.last_window_rows = []
         if sel_np.size == 0:
             return jnp.zeros((0, self.da.block_size), jnp.uint8)
         if self.archive.anchors.size == 0:
@@ -524,23 +596,31 @@ class Decoder:
         max_cmds = int(a.n_cmds.max(initial=1))
         if a.mode == "global":
             self.decoded_blocks_last = 0
+            self.last_window_rows = []
             sel64 = sel.astype(np.int64).reshape(-1)
             if sel64.size == 0:
                 return jnp.zeros((0, a.block_size), jnp.uint8)
 
             def window_rows(first: int, last: int) -> jnp.ndarray:
+                _check_window_bytes(first, last, a.block_size)
                 wsel = np.arange(first, last + 1)
                 L = wsel.size
                 streams = _entropy_decode_host(a, wsel)
+                # low-32-bit window base: the i32 wraparound rebase in
+                # _match_phase is exact for archives starting past 2 GiB
+                wb = int(np.int64(a.block_start[first]).astype(np.int32))
                 flat = _match_phase(
                     "global", streams, jnp.asarray(a.n_cmds[wsel]),
                     jnp.asarray(a.block_len[wsel]),
                     jnp.asarray(a.block_start[wsel].astype(np.int32)),
                     a.block_size, max_cmds, self.backend, a.offset_bytes,
-                    total_size=L * a.block_size,
-                    win_base=int(a.block_start[first]))
+                    total_size=L * a.block_size, win_base=wb,
+                    n_rounds=self.da.max_depth)
                 self.decoded_blocks_last += L
-                return flat.reshape(L, a.block_size)
+                rows = flat.reshape(L, a.block_size)
+                if self.collect_window_rows:
+                    self.last_window_rows.append((first, rows))
+                return rows
 
             out = self._assemble_groups(sel64, window_rows)
         else:
@@ -549,7 +629,8 @@ class Decoder:
                 a.mode, streams, jnp.asarray(a.n_cmds[sel]),
                 jnp.asarray(a.block_len[sel]),
                 jnp.asarray(a.block_start[sel].astype(np.int32)),
-                a.block_size, max_cmds, self.backend, a.offset_bytes, None)
+                a.block_size, max_cmds, self.backend, a.offset_bytes, None,
+                n_rounds=self.da.max_depth)
             self.decoded_blocks_last = int(sel.size)
         if verify:
             self.verify_rows(sel, out)

@@ -11,6 +11,7 @@ from typing import List
 
 import numpy as np
 
+from repro.core import depth as dpth
 from repro.core import entropy as ent
 from repro.core import match_search as ms
 from repro.core.format import (DEFAULT_BLOCK_SIZE, MAX_LEN, N_STREAMS,
@@ -41,7 +42,8 @@ def encode(data: bytes | np.ndarray,
            mode: str = "ra",
            entropy: str = "rans",
            hash_bits: int = 17,
-           anchor_interval: int = 0) -> Archive:
+           anchor_interval: int = 0,
+           origin: int = 0) -> Archive:
     """Compress `data` into an ACEAPEX archive.
 
     `anchor_interval` (global mode only) emits a wavefront restart point
@@ -51,17 +53,40 @@ def encode(data: bytes | np.ndarray,
     anchor instead of the whole prefix (bounded random access), at the
     cost of matches that can no longer cross anchor boundaries.
     0 keeps the anchor-free whole-file window.
+
+    `origin` places the archive at an absolute byte offset of a larger
+    logical file (multi-shard archives): block starts and global-mode
+    match offsets are recorded relative to that origin. Block-level decode
+    APIs are origin-transparent; byte-addressed query-plane entry points
+    assume origin == 0.
     """
     data = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray)) \
         else np.ascontiguousarray(data, np.uint8)
     n = data.shape[0]
     anchor_interval = int(anchor_interval)
+    origin = int(origin)
     if anchor_interval < 0:
         raise ValueError(f"anchor_interval must be >= 0, got {anchor_interval}")
     if anchor_interval and mode != "global":
         raise ValueError(
             'anchor_interval only applies to mode="global" ("ra" blocks '
             "are already self-contained restart points)")
+    if origin < 0:
+        raise ValueError(f"origin must be >= 0, got {origin}")
+    if mode == "global":
+        # the device match phase resolves a decode window in one flat
+        # int32 pointer space, so a single window must span < 2^31 bytes;
+        # anchor-free archives decode whole-prefix (one n-byte window)
+        if not anchor_interval and n >= 2**31:
+            raise ValueError(
+                f"anchor-free global archives decode as ONE {n}-byte "
+                f"window, past the device's 2 GiB flat pointer space — "
+                f"encode with anchor_interval to bound windows")
+        if anchor_interval and anchor_interval * block_size >= 2**31:
+            raise ValueError(
+                f"anchor window spans {anchor_interval} x {block_size} "
+                f">= 2 GiB — the device flat pointer space is int32; "
+                f"use a smaller anchor_interval")
     # "ra" offsets are block-local; two planes hold them only while the
     # block fits 16 bits. Larger blocks (e.g. PAPER1_BLOCK_SIZE) switch to
     # four planes — storing a >=64 KiB offset in two would silently
@@ -72,8 +97,9 @@ def encode(data: bytes | np.ndarray,
     else:
         offset_bytes = 8
     n_blocks = max(1, -(-n // block_size))
-    block_start = (np.arange(n_blocks, dtype=np.int64) * block_size)
-    block_len = np.minimum(n - block_start, block_size).astype(np.int32)
+    block_start = origin + (np.arange(n_blocks, dtype=np.int64) * block_size)
+    block_len = np.minimum(n - (block_start - origin),
+                           block_size).astype(np.int32)
     block_len = np.maximum(block_len, 0)
 
     anchors = np.zeros(0, np.int64)
@@ -89,21 +115,34 @@ def encode(data: bytes | np.ndarray,
             bounds = np.append(anchors, n_blocks) * block_size
             for ws, we in zip(bounds[:-1], np.minimum(bounds[1:], n)):
                 ws, we = int(ws), int(we)
-                c, m = ms.find_matches(data[ws:we], base=ws,
+                c, m = ms.find_matches(data[ws:we], base=origin + ws,
                                        hash_bits=hash_bits)
                 g_cand[ws:we] = c
                 g_mlen[ws:we] = m
         else:
-            g_cand, g_mlen = ms.find_matches(data, base=0,
+            g_cand, g_mlen = ms.find_matches(data, base=origin,
                                              hash_bits=hash_bits)
 
     streams: List[np.ndarray] = []
     class_ids: List[int] = []
     n_cmds = np.zeros(n_blocks, np.int32)
     block_fnv = np.zeros(n_blocks, np.uint64)
+    block_depth = np.zeros(n_blocks, np.int32)
+    if mode == "global":
+        # wavefront chains cross blocks, so depth is measured per anchor
+        # window; blocks arrive in order, so one window's pointer arrays
+        # (i32, window-relative — windows are guarded < 2^31 bytes) are
+        # buffered and freed at the window edge. Peak host memory is a
+        # few bytes per byte of ONE window; anchor-free archives have one
+        # whole-file window by construction, which the < 2 GiB encode
+        # guard above already bounds.
+        win_of = (np.searchsorted(anchors, np.arange(n_blocks), "right") - 1
+                  if anchors.size else np.zeros(n_blocks, np.int64))
+    win_ptrs: List[np.ndarray] = []
+    win_first = 0
 
     for b in range(n_blocks):
-        s, ln = int(block_start[b]), int(block_len[b])
+        s, ln = int(block_start[b]) - origin, int(block_len[b])
         blk = data[s:s + ln]
         block_fnv[b] = np.uint64(fnv1a64_u64_stride(blk))
         if mode == "ra":
@@ -148,6 +187,27 @@ def encode(data: bytes | np.ndarray,
         ll_a = np.asarray(lit_lens, np.uint32)
         ml_a = np.asarray(mlens, np.uint32)
         of_a = np.asarray(offs, np.uint64)
+        # measure the block's exact pointer-resolution depth: the decoder
+        # will run exactly this many doubling rounds instead of
+        # ceil(log2(block_size)). "ra" blocks resolve alone; global-mode
+        # chains cross blocks, so pointers buffer per anchor window
+        # (rebased to window coordinates — the host twin of the decode's
+        # flat pointer space) and resolve at the window edge.
+        if mode == "ra":
+            block_depth[b] = dpth.block_depth_ra(ll_a, ml_a, of_a, ln)
+        else:
+            if not win_ptrs:
+                win_first = b
+            ws = int(block_start[win_first])
+            ptr = dpth.expand_pointers_np(ll_a, ml_a, of_a.astype(np.int64),
+                                          ln, base=int(block_start[b]))
+            win_ptrs.append(np.where(ptr < 0, ptr, ptr - ws)
+                            .astype(np.int32))
+            if b + 1 == n_blocks or win_of[b + 1] != win_of[b]:
+                blks = np.arange(win_first, b + 1)
+                block_depth[blks] = dpth.window_depths(win_ptrs,
+                                                       block_len[blks])
+                win_ptrs = []
         streams.append(literals)
         class_ids.append(S_LITERALS)
         streams.append(_planes_u16(ml_a))
@@ -205,4 +265,5 @@ def encode(data: bytes | np.ndarray,
         offset_bytes=offset_bytes,
         anchor_interval=anchor_interval if anchors.size else 0,
         anchors=anchors,
+        block_depth=block_depth,
     )

@@ -30,6 +30,17 @@ only bytes at or after `block_start[anchor]`. Any block range
 instead of the whole prefix — Kerbiriou & Chikhi-style periodic restart
 points fused with the absolute-offset wavefront. v1 (`ACEJAX02`)
 archives deserialize unchanged with an empty anchor table.
+
+Depth-bounded match resolution (v3 header): the encoder measures the
+exact pointer-doubling round count each block needs (a host-side fixpoint
+over the same expand/resolve recurrence the decoder runs) and records it
+per block (`block_depth`, i32). The chain depth is a property of the
+*parse*, known at encode time and typically a small constant, so the
+decoder runs exactly `max_depth` resolve rounds instead of
+⌈log2(block_size)⌉ dense gather rounds — the match phase drops from 20
+rounds at the paper-1 1 MiB block size to the archive's true depth.
+v1/v2 (`ACEJAX02`/`ACEJAX03`) archives deserialize with depth unknown
+(`block_depth is None`) and decode through an early-exit resolver.
 """
 from __future__ import annotations
 
@@ -154,10 +165,22 @@ class Archive:
         default_factory=lambda: np.zeros(0, np.int64))
                                   # i64[n_anchors] anchor block ids, sorted,
                                   # anchors[0] == 0 when non-empty
+    block_depth: Optional[np.ndarray] = None
+                                  # i32[n_blocks] exact pointer-doubling
+                                  # rounds each block needs (v3 header);
+                                  # None = legacy archive, depth unknown
 
     @property
     def n_blocks(self) -> int:
         return int(self.block_start.shape[0])
+
+    @property
+    def max_depth(self) -> Optional[int]:
+        """Archive-wide resolve-round bound (None when depth is unknown —
+        legacy archives decode through the early-exit resolver)."""
+        if self.block_depth is None:
+            return None
+        return int(self.block_depth.max(initial=0))
 
     @property
     def n_anchors(self) -> int:
@@ -177,6 +200,8 @@ class Archive:
                 + self.block_len.size * 4
                 + self.block_fnv.size * 8
                 + self.anchors.size * 8
+                + (self.block_depth.size * 4
+                   if self.block_depth is not None else 0)
                 + 64)  # fixed header
 
     @property
@@ -185,15 +210,19 @@ class Archive:
 
 
 MAGIC_V1 = b"ACEJAX02"            # anchor-free layout (no anchor tail)
-MAGIC = b"ACEJAX03"               # v2: v1 layout + anchor table tail
+MAGIC_V2 = b"ACEJAX03"            # v2: v1 layout + anchor table tail
+MAGIC = b"ACEJAX04"               # v3: v2 layout + block-depth tail
 
 
 def serialize(a: Archive) -> bytes:
     """Flat binary serialization. All size/offset fields are u64 — the
     paper §5 overflow fix (u32 size fields migrated to 64-bit) is enforced
-    at the format level. Writes the v2 (`ACEJAX03`) layout: the v1 body
-    followed by the anchor table (interval + anchor block ids), so a v2
-    reader accepts v1 archives by stopping at the shorter body."""
+    at the format level. Writes the v3 (`ACEJAX04`) layout: the v1 body
+    followed by the anchor table (interval + anchor block ids) and the
+    per-block chain-depth table, so a v3 reader accepts v1/v2 archives by
+    stopping at the shorter body. An archive whose depth was never
+    measured serializes an empty depth table (deserializes back to
+    `block_depth is None`)."""
     import struct
     head = struct.pack(
         "<8sQQQQB3xB3xQ",
@@ -216,6 +245,12 @@ def serialize(a: Archive) -> bytes:
     raw = np.ascontiguousarray(a.anchors, dtype=np.int64).tobytes()
     parts.append(struct.pack("<Q", len(raw)))
     parts.append(raw)
+    # v3 depth tail: per-block resolve-round table (empty = depth unknown)
+    depth = (np.ascontiguousarray(a.block_depth, dtype=np.int32)
+             if a.block_depth is not None else np.zeros(0, np.int32))
+    raw = depth.tobytes()
+    parts.append(struct.pack("<Q", len(raw)))
+    parts.append(raw)
     return b"".join(parts)
 
 
@@ -232,9 +267,9 @@ def deserialize(buf: bytes) -> Archive:
     head = take(struct.calcsize("<8sQQQQB3xB3xQ"))
     magic, block_size, raw_size, n_blocks, n_words_total, mode_b, ent_b, file_fnv = \
         struct.unpack("<8sQQQQB3xB3xQ", head)
-    if magic not in (MAGIC, MAGIC_V1):
+    if magic not in (MAGIC, MAGIC_V2, MAGIC_V1):
         raise ValueError(f"bad magic {magic!r}")
-    version = 2 if magic == MAGIC else 1
+    version = {MAGIC: 3, MAGIC_V2: 2, MAGIC_V1: 1}[magic]
     (offset_bytes,) = struct.unpack("<Q", take(8))
 
     def arr(dt, shape):
@@ -258,6 +293,10 @@ def deserialize(buf: bytes) -> Archive:
     else:                           # v1: anchor-free by definition
         anchor_interval = 0
         anchors = np.zeros(0, np.int64)
+    block_depth = None
+    if version >= 3:                # v3: per-block chain-depth table
+        depth = arr(np.int32, (-1,))
+        block_depth = depth if depth.size else None
     return Archive(
         block_size=block_size, raw_size=raw_size,
         mode={0: "ra", 1: "global"}[mode_b],
@@ -267,4 +306,5 @@ def deserialize(buf: bytes) -> Archive:
         block_len=block_len, block_fnv=block_fnv, file_fnv=file_fnv,
         offset_bytes=int(offset_bytes),
         anchor_interval=int(anchor_interval), anchors=anchors,
+        block_depth=block_depth,
     )

@@ -219,22 +219,40 @@ class CompressedResidentStore:
             # same keys as BlockCache.info(), all zeroed — callers can
             # read counters without checking whether the cache is on
             return {"capacity": 0, "resident": 0, "hits": 0, "misses": 0,
-                    "evictions": 0, "installs": 0, "bytes_resident": 0,
-                    "buffer_bytes": 0, "decode_launches": 0,
-                    "policy": "off"}
+                    "evictions": 0, "installs": 0, "coinstalls": 0,
+                    "bytes_resident": 0, "buffer_bytes": 0,
+                    "decode_launches": 0, "policy": "off"}
         return self._cache.info()
 
     # ------------------------------------------------------------ internals
     def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
         """(U,) unique block ids → (U, block_size) decoded rows, through the
         device-resident block cache when enabled."""
-        decode = (self.decoder.decode_blocks if mode2
-                  else self.decoder.decode_blocks_host_entropy)
+        dec = self.decoder
+        decode = (dec.decode_blocks if mode2
+                  else dec.decode_blocks_host_entropy)
         if self._cache is None:
             # pad the selection to a power of two so random batches don't
             # retrace the decode kernels for every distinct unique count
             return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
-        return self._cache.rows_for(uniq, decode)
+        if dec.da.mode != "global":
+            return self._cache.rows_for(uniq, decode)
+        # global/wavefront: a miss decode materializes whole anchor
+        # windows — co-install the window rows the CachePlan did not ask
+        # for into free slots, so a scan over the window is ONE launch.
+        # Collection is opt-in (retaining decoded windows costs device
+        # memory) and always cleared before returning.
+        dec.collect_window_rows = True
+        dec.last_window_rows = []
+        try:
+            rows = self._cache.rows_for(uniq, decode)
+            for first, wrows in dec.last_window_rows:
+                self._cache.install_extras(
+                    np.arange(first, first + wrows.shape[0]), wrows)
+        finally:
+            dec.collect_window_rows = False
+            dec.last_window_rows = []
+        return rows
 
     # -------------------------------------------------------------- lookups
     def fetch_reads(self, ids: Sequence[int], mode2: bool = True

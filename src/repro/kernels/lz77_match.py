@@ -73,16 +73,25 @@ def _decode_block_kernel(lit_lens_ref, match_lens_ref, offsets_ref,
     out_ref[0, :] = lits[li]
 
 
-@functools.partial(jax.jit, static_argnames=("out_size", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("out_size", "interpret", "n_rounds"))
 def lz77_decode_blocks_pallas(lit_lens, match_lens, offsets, n_cmds, literals,
-                              block_len, out_size: int, interpret: bool = True):
+                              block_len, out_size: int, interpret: bool = True,
+                              n_rounds: int | None = None):
     """Batched block decode: (B, Cmax) command planes + (B, L) literals →
-    (B, out_size) bytes. Grid = blocks."""
+    (B, out_size) bytes. Grid = blocks.
+
+    `n_rounds` is the static pointer-doubling round count — the archive's
+    recorded chain depth for v3 archives. None falls back to the
+    ⌈log2(block)⌉ worst case (legacy depth-free archives; the kernel body
+    is a fixed-trip fori_loop, so the early-exit variant lives in the ref
+    backend only)."""
     B, C = lit_lens.shape
     L = literals.shape[1]
-    n_rounds = max(1, int(np.ceil(np.log2(max(out_size, 2)))))
+    if n_rounds is None:
+        n_rounds = max(1, int(np.ceil(np.log2(max(out_size, 2)))))
     kernel = functools.partial(_decode_block_kernel, out_size=out_size,
-                               n_rounds=n_rounds)
+                               n_rounds=int(n_rounds))
     return pl.pallas_call(
         kernel,
         grid=(B,),

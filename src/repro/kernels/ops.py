@@ -28,16 +28,20 @@ def _resolve(backend: str) -> str:
 
 
 def lz77_decode_blocks(lit_lens, match_lens, offsets, n_cmds, literals,
-                       block_len, out_size: int, backend: str = "auto"):
+                       block_len, out_size: int, backend: str = "auto",
+                       n_rounds: int | None = None):
+    """`n_rounds` = static resolve-round count (the archive's recorded
+    chain depth). None = depth unknown: the ref backend early-exits via
+    while_loop, the pallas kernel falls back to ceil(log2(out_size))."""
     b = _resolve(backend)
     if b == "ref":
         return _ref.lz77_decode_blocks_ref(
             lit_lens, match_lens, offsets, n_cmds, literals, block_len,
-            out_size)
+            out_size, n_rounds=n_rounds)
     from repro.kernels.lz77_match import lz77_decode_blocks_pallas
     return lz77_decode_blocks_pallas(
         lit_lens, match_lens, offsets, n_cmds, literals, block_len,
-        out_size=out_size, interpret=not _on_tpu())
+        out_size=out_size, interpret=not _on_tpu(), n_rounds=n_rounds)
 
 
 def rans_decode(words, word_off, n_syms, lanes, class_ids, freqs,

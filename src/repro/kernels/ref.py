@@ -3,15 +3,33 @@
 The LZ77 match phase is re-derived for a vector machine: command expansion is
 a scatter + cumsum (no searchsorted — maps 1:1 onto the kernel body), match
 self-overlap folds via the modulo trick, and cross-command dependencies
-resolve with pointer doubling — ⌈log2(block)⌉ dense gathers instead of the
-GPU's warp-serial copies.
+resolve with pointer doubling.
+
+Resolution rounds come in three flavors:
+
+  * depth-bounded (`n_rounds = archive max_depth`) — v3 archives record
+    the exact chain depth at encode time, so the resolver runs that many
+    dense gathers instead of the ⌈log2(block)⌉ worst case (20 at the
+    paper-1 1 MiB block; real parses are typically < 5);
+  * early-exit (`n_rounds = None`) — a `lax.while_loop` that stops the
+    round after no pointer moved: legacy (depth-free) archives converge
+    in depth + 1 rounds instead of log2(block);
+  * fixed log-N (`n_rounds = log2_rounds(out_size)`) — the historical
+    worst case, kept callable for bit-identity regression tests.
 """
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.depth import log2_rounds  # canonical (jax-free) home
+
+__all__ = ["log2_rounds", "expand_pointers", "resolve_pointers",
+           "resolve_rounds", "lz77_decode_block_ref",
+           "lz77_decode_blocks_ref", "lz77_decode_global_ref",
+           "rans_decode_ref"]
 
 
 def expand_pointers(lit_lens, match_lens, offsets, n_cmds, block_len,
@@ -60,41 +78,82 @@ def expand_pointers(lit_lens, match_lens, offsets, n_cmds, block_len,
     return ptr
 
 
-def resolve_pointers(ptr, literals, n_rounds: int):
-    """Pointer doubling + literal payout for ONE block."""
-    def body(_, p):
-        nxt = p[jnp.clip(p, 0, p.shape[0] - 1)]
-        return jnp.where(p >= 0, nxt, p)
+def _double_round(p):
+    nxt = p[jnp.clip(p, 0, p.shape[0] - 1)]
+    return jnp.where(p >= 0, nxt, p)
 
-    ptr = jax.lax.fori_loop(0, n_rounds, body, ptr)
+
+def resolve_pointers(ptr, literals, n_rounds: Optional[int] = None):
+    """Pointer doubling + literal payout for ONE block.
+
+    `n_rounds` is the static round count (the archive's recorded chain
+    depth, or `log2_rounds(out_size)` for the historical worst case).
+    None runs the early-exit variant: a `lax.while_loop` that stops once
+    no pointer moved — legacy depth-free archives converge in chain
+    depth + 1 rounds instead of log2(block).
+    """
+    ptr = resolve_rounds(ptr, n_rounds)
     lit_idx = jnp.clip(-ptr - 1, 0, literals.shape[0] - 1)
     return literals[lit_idx]
 
 
+def resolve_rounds(ptr, n_rounds: Optional[int] = None):
+    """The doubling recurrence alone (shared by block + global paths).
+
+    The early-exit loop is capped at `log2_rounds(len(ptr))`: any VALID
+    parse converges within that (chain hops <= array length), so the cap
+    never costs a correct archive a round — it only stops a malformed /
+    adversarial archive whose pointers form a cycle from hanging the
+    decode forever (digest verification then reports the corruption,
+    exactly as the fixed-round path always did)."""
+    if n_rounds is None:
+        cap = jnp.int32(log2_rounds(ptr.shape[0]))
+
+        def cond(carry):
+            return carry[1] & (carry[2] < cap)
+
+        def body(carry):
+            p, _, r = carry
+            q = _double_round(p)
+            return q, jnp.any(q != p), r + 1
+
+        ptr, _, _ = jax.lax.while_loop(
+            cond, body, (ptr, jnp.any(ptr >= 0), jnp.int32(0)))
+        return ptr
+    return jax.lax.fori_loop(0, n_rounds, lambda _, p: _double_round(p),
+                             ptr)
+
+
 def lz77_decode_block_ref(lit_lens, match_lens, offsets, n_cmds, literals,
-                          block_len, out_size: int):
+                          block_len, out_size: int,
+                          n_rounds: Optional[int] = None):
     """Decode ONE self-contained block (oracle for the Pallas kernel)."""
-    n_rounds = max(1, int(np.ceil(np.log2(max(out_size, 2)))))
     ptr = expand_pointers(lit_lens, match_lens, offsets, n_cmds, block_len,
                           out_size)
     return resolve_pointers(ptr, literals, n_rounds)
 
 
 def lz77_decode_blocks_ref(lit_lens, match_lens, offsets, n_cmds, literals,
-                           block_len, out_size: int):
-    """vmapped multi-block decode: args batched on axis 0."""
+                           block_len, out_size: int,
+                           n_rounds: Optional[int] = None):
+    """vmapped multi-block decode: args batched on axis 0. Under vmap the
+    early-exit while_loop runs until the whole batch has converged."""
     fn = lambda a, b, c, d, e, f: lz77_decode_block_ref(a, b, c, d, e, f,
-                                                        out_size)
+                                                        out_size,
+                                                        n_rounds=n_rounds)
     return jax.vmap(fn)(lit_lens, match_lens, offsets, n_cmds, literals,
                         block_len)
 
 
 def lz77_decode_global_ref(lit_lens, match_lens, offsets, n_cmds, literals,
                            lit_base, block_start, block_len, out_size: int,
-                           total_size: int):
+                           total_size: int,
+                           n_rounds: Optional[int] = None):
     """Wavefront-generalized decode: ALL blocks' pointers in one flat output
-    space, offsets absolute — chains may cross blocks; ⌈log2(total)⌉ global
-    gather rounds replace the GPU wavefront schedule (DESIGN.md §3.3).
+    space, offsets window-relative — chains may cross blocks; `n_rounds`
+    global gather rounds (the archive's recorded depth; None = early-exit
+    while_loop; `log2_rounds(total_size)` = the historical worst case)
+    replace the GPU wavefront schedule (DESIGN.md §3.3).
 
     literals: (B, max_lit) per-block literal arrays; lit_base: global literal
     index base per block (exclusive cumsum of literal counts).
@@ -126,13 +185,7 @@ def lz77_decode_global_ref(lit_lens, match_lens, offsets, n_cmds, literals,
 
     lit_flat = literals.reshape(-1)
     # global literal index -> (block, local) via lit_base is already folded in
-    n_rounds = max(1, int(np.ceil(np.log2(max(total_size, 2)))))
-
-    def body(_, p):
-        nxt = p[jnp.clip(p, 0, total_size - 1)]
-        return jnp.where(p >= 0, nxt, p)
-
-    flat = jax.lax.fori_loop(0, n_rounds, body, flat)
+    flat = resolve_rounds(flat, n_rounds)
     gl = jnp.clip(-flat - 1, 0, lit_flat.shape[0] - 1)
     return lit_flat[gl]
 

@@ -138,10 +138,13 @@ def test_v1_archive_deserializes_anchor_free(corpus):
     a = enc.encode(data, block_size=BS)
     buf = fmt.serialize(a)
     assert buf[:8] == fmt.MAGIC
-    # v1 layout == v2 layout minus the 16-byte empty anchor tail
-    v1 = fmt.MAGIC_V1 + buf[8:-16]
+    # v1 layout == v3 layout minus the depth tail (8B length prefix +
+    # i32 per block) and the 16-byte empty anchor tail
+    depth_tail = 8 + 4 * a.n_blocks
+    v1 = fmt.MAGIC_V1 + buf[8:-(16 + depth_tail)]
     b = fmt.deserialize(v1)
     assert b.anchor_interval == 0 and b.n_anchors == 0
+    assert b.block_depth is None and b.max_depth is None
     assert np.array_equal(dec.Decoder(b, backend="ref").decode_all(),
                           np.frombuffer(data, np.uint8))
     with pytest.raises(ValueError, match="bad magic"):

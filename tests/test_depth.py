@@ -1,0 +1,306 @@
+"""Depth-bounded match resolution (`ACEJAX04`): encode-time chain-depth
+metadata, legacy early-exit decode, >2 GiB window rebasing, and the
+anchor-window cache co-install."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import decoder as dec
+from repro.core import encoder as enc
+from repro.core import format as fmt
+from repro.core.depth import log2_rounds
+from repro.core.residency import CompressedResidentStore
+
+
+def deep_chain_payload(n_bytes: int, seg: int = 512, seed: int = 0
+                       ) -> np.ndarray:
+    """A literal segment copied repeatedly, separated by random delimiters.
+
+    The one-probe matcher resolves each occurrence against the *previous*
+    one, so occurrence k sits k hops from the literal seed — chain depth
+    is provably > 1 — while delimiters stop matches from extending across
+    copies (bounded match lengths keep the encoder fast)."""
+    rng = np.random.default_rng(seed)
+    body = rng.integers(0, 256, seg, dtype=np.uint8)
+    parts = [body]
+    total = seg
+    while total < n_bytes:
+        delim = rng.integers(0, 256, 16, dtype=np.uint8)
+        parts += [delim, body]
+        total += 16 + seg
+    return np.concatenate(parts)[:n_bytes]
+
+
+def _decode_all_rows(d: dec.Decoder, a: fmt.Archive) -> np.ndarray:
+    rows = np.asarray(d.decode_blocks(np.arange(a.n_blocks)))
+    return np.concatenate([rows[i, :int(a.block_len[i])]
+                           for i in range(a.n_blocks)])
+
+
+# ------------------------------------------------------------- tentpole
+def test_depth_recorded_exact_and_tight():
+    """The recorded depth is exactly sufficient: decode with max_depth
+    rounds is bit-perfect, with max_depth - 1 rounds it is not."""
+    raw = deep_chain_payload(100_000)
+    a = enc.encode(raw.tobytes(), block_size=4096)
+    assert a.block_depth is not None and a.block_depth.shape == (a.n_blocks,)
+    assert a.max_depth > 1                      # deep-chain payload
+    assert a.max_depth < log2_rounds(4096)      # and far below the log-N cap
+    d = dec.Decoder(a, backend="ref")
+    assert np.array_equal(_decode_all_rows(d, a), raw)
+    # tightness: one round fewer leaves unresolved pointers
+    short = dec.Decoder(a, backend="ref")
+    short.da = dataclasses.replace(short.da, max_depth=a.max_depth - 1)
+    assert not np.array_equal(_decode_all_rows(short, a), raw)
+    # and the historical fixed log-N round count is bit-identical
+    logn = dec.Decoder(a, backend="ref")
+    logn.da = dataclasses.replace(logn.da, max_depth=log2_rounds(4096))
+    assert np.array_equal(_decode_all_rows(logn, a), raw)
+
+
+@pytest.mark.parametrize("mode,interval", [("ra", 0), ("global", 0),
+                                           ("global", 4)])
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+def test_depth_bounded_equals_logn_small(mode, interval, entropy):
+    """Depth-bounded decode == legacy early-exit == log-N ground truth,
+    on deep-chain payloads (the fast slice of the full sweep)."""
+    raw = deep_chain_payload(60_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode=mode,
+                   entropy=entropy, anchor_interval=interval)
+    assert a.max_depth > 1
+    d = dec.Decoder(a, backend="ref")
+    got = _decode_all_rows(d, a)
+    assert np.array_equal(got, raw)
+    # legacy (depth-free) archive: early-exit while_loop path
+    legacy = dataclasses.replace(a, block_depth=None)
+    dl = dec.Decoder(legacy, backend="ref")
+    assert dl.da.max_depth is None
+    assert np.array_equal(_decode_all_rows(dl, legacy), got)
+    # scattered partial selections stay bit-identical too
+    sel = np.array([a.n_blocks - 1, 1, a.n_blocks // 2])
+    r1 = np.asarray(d.decode_blocks(sel))
+    r2 = np.asarray(dl.decode_blocks(sel))
+    assert np.array_equal(r1, r2)
+    m1 = np.asarray(d.decode_blocks_host_entropy(sel))
+    assert np.array_equal(m1, r1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("block_size", [16 * 1024, 64 * 1024, 1024 * 1024])
+@pytest.mark.parametrize("mode,interval", [("ra", 0), ("global", 0),
+                                           ("global", 2)])
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+def test_depth_property_sweep(block_size, mode, interval, entropy):
+    """Full acceptance sweep: mode x entropy x block size (incl. the
+    paper-1 1 MiB block, the 20-round log-N regime) on deep-chain
+    payloads — depth-bounded decode is bit-identical to the legacy path
+    and the recorded depth stays far below log2(block_size). The segment
+    stays small relative to the block: one-probe match search is
+    quadratic-ish in match length, and long periodic matches (not chain
+    depth) are what make it crawl."""
+    raw = deep_chain_payload(int(block_size * 2.5), seg=1024)
+    a = enc.encode(raw.tobytes(), block_size=block_size, mode=mode,
+                   entropy=entropy, anchor_interval=interval)
+    assert 1 < a.max_depth < log2_rounds(block_size)
+    d = dec.Decoder(a, backend="ref")
+    assert np.array_equal(_decode_all_rows(d, a), raw)
+    legacy = dataclasses.replace(a, block_depth=None)
+    assert np.array_equal(
+        _decode_all_rows(dec.Decoder(legacy, backend="ref"), legacy), raw)
+
+
+def test_early_exit_terminates_on_malformed_cycle():
+    """The legacy early-exit resolver is round-capped: an adversarial
+    archive whose pointers form a cycle must not hang the decode (digest
+    verification then reports the corruption, as the fixed-round path
+    always did)."""
+    import jax.numpy as jnp
+    from repro.kernels.ref import resolve_pointers
+    ptr = jnp.asarray(np.array([1, 2, 0, -1], np.int32))  # 3-cycle
+    out = resolve_pointers(ptr, jnp.asarray(np.array([7], np.uint8)))
+    assert out.shape == (4,)                   # returned at the cap
+
+
+def test_depth_bounded_pallas_backend():
+    """The pallas kernel takes the static depth too (interpret mode)."""
+    raw = deep_chain_payload(8_000, seg=256)
+    a = enc.encode(raw.tobytes(), block_size=2048)
+    assert a.max_depth > 1
+    d = dec.Decoder(a, backend="pallas")
+    assert np.array_equal(_decode_all_rows(d, a), raw)
+
+
+def test_plan_carries_max_depth():
+    raw = deep_chain_payload(40_000)
+    a = enc.encode(raw.tobytes(), block_size=4096)
+    s = CompressedResidentStore(a)
+    planner, _ = s._api()
+    plan = planner.plan_spans(np.array([0]), np.array([5000]))
+    assert plan.max_depth == a.max_depth
+
+
+# --------------------------------------------------------------- format
+def test_serialization_roundtrips_depth_table():
+    raw = deep_chain_payload(50_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   anchor_interval=4)
+    buf = fmt.serialize(a)
+    assert buf[:8] == fmt.MAGIC == b"ACEJAX04"
+    b = fmt.deserialize(buf)
+    assert np.array_equal(b.block_depth, a.block_depth)
+    assert b.block_depth.dtype == np.int32
+    assert b.max_depth == a.max_depth
+    assert np.array_equal(
+        _decode_all_rows(dec.Decoder(b, backend="ref"), b), raw)
+
+
+def test_v2_archive_deserializes_depth_free():
+    """`ACEJAX03` (v2: anchor tail, no depth tail) archives deserialize
+    with depth unknown and decode through the early-exit resolver."""
+    raw = deep_chain_payload(50_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   anchor_interval=4)
+    buf = fmt.serialize(a)
+    depth_tail = 8 + 4 * a.n_blocks
+    v2 = fmt.MAGIC_V2 + buf[8:-depth_tail]
+    b = fmt.deserialize(v2)
+    assert b.block_depth is None and b.max_depth is None
+    assert b.anchor_interval == 4            # anchor tail survives
+    assert np.array_equal(b.anchors, a.anchors)
+    d = dec.Decoder(b, backend="ref")
+    assert d.da.max_depth is None
+    assert np.array_equal(_decode_all_rows(d, b), raw)
+    # window-bounded seeks still work depth-free
+    d.decode_blocks(np.array([b.n_blocks - 1]))
+    assert d.decoded_blocks_last <= 4 + 1
+
+
+def test_depth_unmeasured_serializes_as_empty():
+    raw = deep_chain_payload(20_000)
+    a = enc.encode(raw.tobytes(), block_size=4096)
+    legacy = dataclasses.replace(a, block_depth=None)
+    b = fmt.deserialize(fmt.serialize(legacy))
+    assert b.block_depth is None and b.max_depth is None
+
+
+# ---------------------------------------------------- >2 GiB global guard
+BIG = 2**31
+
+
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+def test_global_anchored_origin_past_2gib(entropy):
+    """Regression (ROADMAP: global offsets past 2 GiB): a shard whose
+    windows start beyond 2^31 used to truncate absolute offsets to 31
+    bits BEFORE window rebasing and corrupt silently. The rebase now
+    happens in full low-32-bit wraparound arithmetic."""
+    raw = deep_chain_payload(40_000)
+    origin = BIG + 3 * 4096 + 17             # well past the i32 horizon
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   entropy=entropy, anchor_interval=4, origin=origin)
+    assert int(a.block_start[0]) == origin   # absolute shard coordinates
+    d = dec.Decoder(a, backend="ref")
+    assert np.array_equal(_decode_all_rows(d, a), raw)
+    # scattered seeks decode window-bounded and bit-perfect
+    sel = np.array([a.n_blocks - 1, 2])
+    rows = np.asarray(d.decode_blocks(sel))
+    for i, b in enumerate(sel):
+        s, ln = int(b) * 4096, int(a.block_len[b])
+        assert np.array_equal(rows[i, :ln], raw[s:s + ln]), f"block {b}"
+    assert d.decoded_blocks_last < a.n_blocks
+    # Mode 1 (host entropy) rides the same rebase
+    m1 = np.asarray(d.decode_blocks_host_entropy(sel))
+    assert np.array_equal(m1, rows)
+
+
+def test_global_anchor_free_origin_past_2gib():
+    """Anchor-free shards rebase against block 0's start (the origin), so
+    they too survive past 2 GiB as long as the payload itself is < 2^31."""
+    raw = deep_chain_payload(30_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   origin=BIG + 999)
+    d = dec.Decoder(a, backend="ref")
+    assert np.array_equal(_decode_all_rows(d, a), raw)
+
+
+def test_window_guard_shared_by_both_modes():
+    """Mode-1 and mode-2 window decodes share the >= 2 GiB flat-pointer
+    guard (a legacy archive with a giant anchor_interval must error
+    loudly on either path, not overflow int32 positions)."""
+    with pytest.raises(ValueError, match="2 GiB"):
+        dec._check_window_bytes(0, 2**20, 4096)
+    dec._check_window_bytes(0, 2**18, 4096)     # 1 GiB window is fine
+
+
+def test_global_anchor_free_2gib_payload_rejected():
+    """A >2 GiB anchor-free global archive cannot decode through one flat
+    int32 pointer space — that must be a loud error, not silent
+    corruption (encode- and decode-side)."""
+    raw = deep_chain_payload(20_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global")
+    big = dataclasses.replace(a, raw_size=BIG)
+    with pytest.raises(ValueError, match="anchor_interval"):
+        dec.to_device(big)
+    with pytest.raises(ValueError, match="anchor_interval"):
+        enc.encode(np.zeros(1, np.uint8), mode="global",
+                   anchor_interval=2**20, block_size=4096)
+
+
+# ------------------------------------------------- anchor-window co-install
+def test_cache_coinstalls_anchor_window():
+    """A miss on an anchored-global block decodes its whole window; the
+    cache now keeps the co-decoded sibling rows, so scanning the window
+    costs ONE decode launch total."""
+    raw = deep_chain_payload(60_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   anchor_interval=4)
+    assert a.n_blocks >= 8
+    s = CompressedResidentStore(a, cache_blocks=16)
+    # block 7 governs window [4, 7]: the miss decode materializes 4
+    # blocks, installs 1, co-installs the other 3
+    rows = np.asarray(s.fetch_block_range(7, 8))
+    assert np.array_equal(rows[0, :int(a.block_len[7])],
+                          raw[7 * 4096:7 * 4096 + int(a.block_len[7])])
+    info = s.cache_info()
+    assert info["decode_launches"] == 1
+    assert info["coinstalls"] == 3
+    # the rest of the window is now resident: zero further launches
+    win = np.asarray(s.fetch_block_range(4, 8))
+    for i, b in enumerate(range(4, 8)):
+        ln = int(a.block_len[b])
+        assert np.array_equal(win[i, :ln], raw[b * 4096:b * 4096 + ln])
+    info = s.cache_info()
+    assert info["decode_launches"] == 1        # pure cache hits
+    assert info["hits"] >= 4
+
+
+def test_coinstall_respects_capacity():
+    """Speculative window rows fill FREE slots only — they never evict."""
+    raw = deep_chain_payload(60_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   anchor_interval=4)
+    s = CompressedResidentStore(a, cache_blocks=2)
+    np.asarray(s.fetch_block_range(7, 8))      # window [4,7], capacity 2
+    info = s.cache_info()
+    assert info["resident"] == 2               # 1 install + 1 co-install
+    assert info["coinstalls"] == 1
+    assert info["evictions"] == 0
+    # whole-archive read-through stays bit-perfect under that pressure
+    got = np.concatenate([
+        np.asarray(s.fetch_block_range(b, b + 1))[0, :int(a.block_len[b])]
+        for b in range(a.n_blocks)])
+    assert np.array_equal(got, raw)
+
+
+def test_coinstall_mode1_staged_path():
+    """Mode-1 (host entropy) staged fetches co-install windows too."""
+    raw = deep_chain_payload(60_000)
+    a = enc.encode(raw.tobytes(), block_size=4096, mode="global",
+                   anchor_interval=4)
+    s = CompressedResidentStore(a, cache_blocks=16)
+    np.asarray(s.fetch_block_range(7, 8, mode2=False))
+    info = s.cache_info()
+    assert info["coinstalls"] == 3
+    launches = info["decode_launches"]
+    np.asarray(s.fetch_block_range(4, 8, mode2=False))
+    assert s.cache_info()["decode_launches"] == launches
