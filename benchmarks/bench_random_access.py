@@ -67,6 +67,33 @@ def main(small: bool = False):
     row("ra/stage_match", t_match,
         f"share={t_match/t_full:.2f};resolve_rounds={a.max_depth}")
 
+    # depth-bucketed scheduling: a mixed-depth corpus (FASTQ head +
+    # incompressible tail) decodes with one launch per pow2 depth bucket
+    # — shallow blocks stop after THEIR bucket's rounds instead of the
+    # archive-wide bound. The derived field carries the launch histogram
+    # (`buckets=rounds:blocks|...`) so `bench_compare.py` surfaces
+    # scheduling changes next to the timing.
+    from repro.core.depth import bucket_histogram
+    rng = np.random.default_rng(0)
+    mixed = buf + rng.integers(0, 256, len(buf) // 2,
+                               dtype=np.uint8).tobytes()
+    am = encoder.encode(mixed, block_size=16384)
+    dm = Decoder(am, backend="ref")
+    sel_m = np.arange(am.n_blocks)
+    t_bkt = time_fn(lambda: dm.decode_blocks(sel_m), iters=3)
+    dm.decode_blocks(sel_m)
+    hist = bucket_histogram(dm.block_rounds)
+    hist_s = "|".join(f"{r}:{n}" for r, n in sorted(hist.items()))
+    flat = Decoder(am, backend="ref")
+    flat._block_rounds = None
+    t_flat = time_fn(lambda: flat.decode_blocks(sel_m), iters=3)
+    assert np.array_equal(np.asarray(dm.decode_blocks(sel_m)),
+                          np.asarray(flat.decode_blocks(sel_m)))
+    row("ra/depth_bucketed_GBps", t_bkt,
+        f"{len(mixed)/t_bkt/1e9:.3f}GB/s(cpu);launches={len(hist)};"
+        f"buckets={hist_s};vs_flat={t_flat/t_bkt:.2f}x;"
+        f"max_depth={am.max_depth}")
+
     # paper-1 settings: 1 MiB blocks, where log-N was 20 resolve rounds
     p1 = encoder.encode(buf, block_size=PAPER1_BLOCK_SIZE)
     dp1 = Decoder(p1, backend="ref")

@@ -1,0 +1,41 @@
+"""Encode autotuner: grid sweep cost and the measured Pareto frontier.
+
+`tune/sweep` times one bounded-sample sweep of the default knob grid
+(the cost a `GenomicArchive.create` caller pays up front, amortized over
+the archive's lifetime); `tune/frontier_points` reports the frontier the
+sweep found — point count, the selected profile per objective, and the
+frontier's (ratio, seek) extremes — so a tuner change that collapses or
+degrades the frontier shows up in the bench gate output."""
+import time
+
+from benchmarks.common import corpora, row
+from repro.tune import autotune, default_grid
+
+
+def main(small: bool = False):
+    buf = corpora(1000 if small else 4000)["fastq_platinum"]
+    grid = default_grid(block_sizes=(4096, 16 * 1024)) if small \
+        else default_grid()
+    sample = (64 * 1024) if small else (512 * 1024)
+
+    t0 = time.perf_counter()
+    res = autotune(buf, target="seek", grid=grid, sample_bytes=sample,
+                   iters=1)
+    t_sweep = time.perf_counter() - t0
+    row("tune/sweep", t_sweep,
+        f"points={len(res.points)};skipped={len(res.skipped)};"
+        f"sample_bytes={res.sample_bytes}")
+
+    front = sorted(res.frontier, key=lambda p: p.seek_us)
+    best_ratio = max(res.frontier, key=lambda p: p.ratio)
+    row("tune/frontier_points", t_sweep / max(len(res.points), 1),
+        f"frontier={len(front)}/{len(res.points)};"
+        f"seek_pick={res.profile.describe()};"
+        f"ratio_pick={best_ratio.profile.describe()};"
+        f"seek_us={front[0].seek_us:.0f}..{front[-1].seek_us:.0f};"
+        f"ratio={min(p.ratio for p in front):.2f}.."
+        f"{max(p.ratio for p in front):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,25 +1,11 @@
 """Shared benchmark utilities. All numbers measured on THIS container's CPU
 devices and labeled as such — TPU v5e throughput is projected by the
-roofline (EXPERIMENTS.md §Roofline), not faked here."""
-import time
-from typing import Callable, Tuple
+roofline (EXPERIMENTS.md §Roofline), not faked here.
 
-import numpy as np
-
-import jax
-
-
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
-            **kw) -> float:
-    """Best-of-N wall time in seconds (after warmup), blocking on results."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args, **kw))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        best = min(best, time.perf_counter() - t0)
-    return best
+`time_fn` lives in `repro.tune.measure` (the autotuner sweeps the knob
+grid with the same timer these tables use) and is re-exported here for
+the bench modules."""
+from repro.tune.measure import time_fn        # noqa: F401 (re-export)
 
 
 # every row() call lands here so the driver can emit a machine-readable

@@ -58,6 +58,8 @@ _TABLES = [
     ("ratio", "benchmarks.bench_ratio", "§6.2: ratio + stream separation"),
     ("entropy", "benchmarks.bench_entropy", "§6.4: open entropy stage"),
     ("blocksize", "benchmarks.bench_blocksize", "§2.1: block-size sweep"),
+    ("tune", "benchmarks.bench_tune",
+     "autotuner: encode-knob sweep cost + Pareto frontier"),
 ]
 
 

@@ -20,6 +20,7 @@ from repro.core.residency import CompressedResidentStore
 from repro.data.fastq import make_fastq
 from repro.models.registry import build_model
 from repro.serving.serve_step import ServeConfig, ServeSession
+from repro.tune import autotune
 
 
 def main():
@@ -28,7 +29,11 @@ def main():
     params = model.init(jax.random.key(0))
 
     corpus = make_fastq("platinum", n_reads=3000, seed=0)
-    archive = encoder.encode(corpus, block_size=16 * 1024)
+    # serving wants fast point lookups: tune the encode knobs for seek
+    # latency on a corpus sample instead of hand-picking a block size
+    profile = autotune(corpus, target="seek", sample_bytes=256 * 1024).profile
+    print(f"tuned profile [seek]: {profile.describe()}")
+    archive = encoder.encode(corpus, profile=profile)
     idx = ReadIndex.build(corpus, archive.block_size)
     store = CompressedResidentStore(archive, idx)
     st = store.stats()

@@ -64,16 +64,18 @@ def load(path: str) -> tuple:
 
 
 def depth_tag(name: str, derived: str) -> str:
-    """`ra/*` rows carry the archive's recorded resolve depth in their
-    derived field (`max_depth=K`); surface it next to the timing so a
-    depth regression (e.g. an encoder change producing deeper parses) is
-    visible in the gate output, not just the time it costs."""
+    """`ra/*` rows carry the archive's recorded resolve depth
+    (`max_depth=K`) and, for bucketed decodes, the launch histogram
+    (`buckets=rounds:launches|...`) in their derived field; surface both
+    next to the timing so a depth regression (e.g. an encoder change
+    producing deeper parses) or a scheduling change (buckets collapsing
+    to the archive bound) is visible in the gate output, not just the
+    time it costs."""
     if not name.startswith("ra/"):
         return ""
-    for part in derived.split(";"):
-        if part.startswith("max_depth="):
-            return f" [{part}]"
-    return ""
+    tags = [part for part in derived.split(";")
+            if part.startswith(("max_depth=", "buckets="))]
+    return f" [{';'.join(tags)}]" if tags else ""
 
 
 def merge(out_path: str, in_paths: list) -> int:

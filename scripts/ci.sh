@@ -43,15 +43,17 @@ fi
 
 if [ "$BENCH" = 1 ]; then
   # bench smoke: index/fetch/query planes, the block-size sweep (the
-  # regime that exposed the u16 offset truncation), the block cache, and
-  # random access incl. the checkpointed-wavefront seek. The
+  # regime that exposed the u16 offset truncation), the block cache,
+  # random access incl. the checkpointed-wavefront seek, and a --small
+  # autotuner sweep (tune/sweep, tune/frontier_points). The
   # random_access table exercises BOTH resolver paths every run: the
   # depth-bounded decode of a fresh ACEJAX04 archive (ra/full_decode,
   # ra/decode_GBps — asserted bit-identical) and the legacy depth-free
-  # early-exit decode (ra/legacy_early_exit); bench_compare prints each
-  # ra/* row's recorded max_depth next to its time.
+  # early-exit decode (ra/legacy_early_exit), plus the depth-bucketed
+  # schedule (ra/depth_bucketed_GBps); bench_compare prints each ra/*
+  # row's recorded max_depth and bucket histogram next to its time.
   python -m benchmarks.run --small \
-    --only index,fetch_batch,query,blocksize,cache,random_access \
+    --only index,fetch_batch,query,blocksize,cache,random_access,tune \
     --json bench_current.json
   python scripts/bench_compare.py BENCH_baseline.json bench_current.json
 fi

@@ -32,6 +32,9 @@ class GenomicArchive:
     surface. Wraps an existing `CompressedResidentStore` (use `from_bytes`
     / `from_records` to build everything from raw bytes)."""
 
+    profile = None   # the EncodeProfile `create` tuned/used, when built
+                     # through the autotuned path
+
     def __init__(self, store, names: Optional[Sequence[bytes]] = None,
                  name_table: Optional[NameTable] = None):
         self.store = store
@@ -46,21 +49,25 @@ class GenomicArchive:
     def from_bytes(cls, data: bytes, block_size: int = 16 * 1024,
                    mode: str = "ra", entropy: str = "rans",
                    backend: str = "auto", cache_blocks: int = 0,
-                   cache_policy="lru",
-                   anchor_interval: int = 0) -> "GenomicArchive":
+                   cache_policy="lru", anchor_interval: int = 0,
+                   profile=None) -> "GenomicArchive":
         """FASTQ bytes → encoded archive + ReadIndex + device name table.
         cache_blocks > 0 enables the device-resident decoded-block cache
         ("lru" | "freq" | an `EvictionPolicy` instance). `anchor_interval`
         (global mode) emits a wavefront restart point every that many
         blocks, so point queries decode one anchor window instead of the
-        whole prefix — global-class ratios with bounded random access."""
+        whole prefix — global-class ratios with bounded random access.
+        `profile` (an `repro.tune.EncodeProfile`, e.g. from `autotune`)
+        supplies every encode knob at once — pass it INSTEAD of
+        block_size/mode/entropy/anchor_interval."""
         from repro.core.encoder import encode
         from repro.core.index import ReadIndex, parse_fastq_records
         from repro.core.residency import CompressedResidentStore
         starts, names = parse_fastq_records(data)
         archive = encode(data, block_size=block_size, mode=mode,
-                         entropy=entropy, anchor_interval=anchor_interval)
-        index = ReadIndex(starts=starts, block_size=block_size)
+                         entropy=entropy, anchor_interval=anchor_interval,
+                         profile=profile)
+        index = ReadIndex(starts=starts, block_size=archive.block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
                                         cache_policy=cache_policy)
@@ -71,9 +78,11 @@ class GenomicArchive:
                      block_size: int = 16 * 1024, mode: str = "ra",
                      entropy: str = "rans", backend: str = "auto",
                      cache_blocks: int = 0, cache_policy="lru",
-                     anchor_interval: int = 0) -> "GenomicArchive":
+                     anchor_interval: int = 0,
+                     profile=None) -> "GenomicArchive":
         """Fixed-size records (tokenized corpora): arithmetic index, no
-        names. `data` is truncated to a whole number of records."""
+        names. `data` is truncated to a whole number of records.
+        `profile` supplies every encode knob (see `from_bytes`)."""
         from repro.core.encoder import encode
         from repro.core.index import ReadIndex
         from repro.core.residency import CompressedResidentStore
@@ -82,12 +91,47 @@ class GenomicArchive:
             raise ValueError("corpus smaller than one record")
         data = data[:n_rec * record_bytes]
         archive = encode(data, block_size=block_size, mode=mode,
-                         entropy=entropy, anchor_interval=anchor_interval)
-        index = ReadIndex.fixed_records(n_rec, record_bytes, block_size)
+                         entropy=entropy, anchor_interval=anchor_interval,
+                         profile=profile)
+        index = ReadIndex.fixed_records(n_rec, record_bytes,
+                                        archive.block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
                                         cache_policy=cache_policy)
         return cls(store)
+
+    @classmethod
+    def create(cls, data: bytes, target: str = "seek",
+               latency_budget_us: Optional[float] = None,
+               record_bytes: Optional[int] = None,
+               sample_bytes: int = 1 << 20, backend: str = "auto",
+               cache_blocks: int = 0, cache_policy="lru",
+               profile=None, **tune_kwargs) -> "GenomicArchive":
+        """Autotuned builder: sweep the encode knob grid on a bounded
+        sample of `data`, pick the Pareto point for the declared objective
+        (`target` = "seek" | "ratio" | "throughput", or a
+        `latency_budget_us` meaning best ratio whose seek fits the
+        budget), then encode the full corpus with the winning
+        `EncodeProfile`. Pass `profile=` to skip the sweep and reuse a
+        previously tuned profile. `record_bytes` routes to `from_records`
+        (fixed-size records) instead of FASTQ parsing. The chosen profile
+        is exposed as `ga.profile`."""
+        if profile is None:
+            from repro.tune import autotune
+            result = autotune(data, target=target,
+                              latency_budget_us=latency_budget_us,
+                              sample_bytes=sample_bytes, **tune_kwargs)
+            profile = result.profile
+        if record_bytes is not None:
+            ga = cls.from_records(data, record_bytes, backend=backend,
+                                  cache_blocks=cache_blocks,
+                                  cache_policy=cache_policy, profile=profile)
+        else:
+            ga = cls.from_bytes(data, backend=backend,
+                                cache_blocks=cache_blocks,
+                                cache_policy=cache_policy, profile=profile)
+        ga.profile = profile
+        return ga
 
     # ------------------------------------------------------------- queries
     def plan(self, addrs: Sequence[Address]) -> DecodePlan:

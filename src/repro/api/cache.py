@@ -212,12 +212,15 @@ class BlockCache:
     """
 
     def __init__(self, capacity: int, block_size: int, n_blocks: int,
-                 policy: Union[str, EvictionPolicy] = "lru"):
+                 policy: Union[str, EvictionPolicy] = "lru",
+                 block_rounds: Optional[np.ndarray] = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.capacity = int(capacity)
         self.block_size = int(block_size)
         self.n_blocks = int(n_blocks)
+        self.block_rounds = block_rounds  # i32[n_blocks] scheduled resolve
+                                          # rounds (None = legacy archive)
         self.buf = jnp.zeros((self.capacity, self.block_size), jnp.uint8)
         self.slot_block = np.full(self.capacity, -1, np.int64)
         self.slot_of = np.full(self.n_blocks, -1, np.int32)
@@ -301,11 +304,17 @@ class BlockCache:
         src_idx = np.empty(uniq.size, np.int32)
         src_idx[hit_mask] = hit_slots
         src_idx[~hit_mask] = np.arange(miss_blocks.size, dtype=np.int32)
+        miss_groups = None
+        if self.block_rounds is not None and miss_blocks.size:
+            r = self.block_rounds[miss_blocks]
+            miss_groups = [(int(v), np.flatnonzero(r == v))
+                           for v in np.unique(r)]
         return CachePlan(
             uniq=uniq, src_is_miss=src_is_miss, src_idx=src_idx,
             miss_blocks=miss_blocks, install_slots=install_slots,
             n_hits=int(hit_mask.sum()), n_misses=int(miss_blocks.size),
-            n_installed=int(take.size), n_evicted=int(evicted.size))
+            n_installed=int(take.size), n_evicted=int(evicted.size),
+            miss_groups=miss_groups)
 
     def reset(self) -> None:
         """Drop every resident block and reallocate the buffer (counters

@@ -77,6 +77,15 @@ class DeviceExecutor:
         anchored = (dec.da.mode == "global" and dec.da.anchors is not None
                     and dec.da.anchors.size > 0)
         jitted = mode2 and store._cache_cap == 0 and not anchored
+        # depth-bucketed reroute: the fused device cores run a static
+        # archive-wide round count, so a selection whose covering set sits
+        # entirely below the deepest bucket saves rounds only on the
+        # staged path (one launch per depth bucket). Reroute exactly then;
+        # mixed selections touching the top bucket keep the fused launch.
+        if jitted and dec.multi_bucket and plan.block_rounds is not None:
+            needed = plan.needed_rounds()
+            if needed is not None and needed < (dec.da.max_depth or 0):
+                jitted = False
         if jitted and plan.device_ids is not None:
             out, lens = _fetch_reads_jit(
                 dec.arrays, store._starts_blk, store._starts_rem,
@@ -288,7 +297,10 @@ class StreamingExecutor:
         dec = self.store.decoder
         decode = (dec.decode_blocks if self.mode2
                   else dec.decode_blocks_host_entropy)
-        rows = decode(uniq.astype(np.int32), verify=self.verify)
+        # pad_groups=False: depth-bucket launches stay exact-size here for
+        # the same budget reason the selection itself is not pow2-padded
+        rows = decode(uniq.astype(np.int32), verify=self.verify,
+                      pad_groups=False)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=bs, max_len=plan.max_len)
@@ -328,8 +340,25 @@ class ShardedExecutor:
             return (jnp.zeros((0, plan.max_len), jnp.uint8),
                     jnp.zeros((0,), jnp.int32))
         _, r0, _, uniq, row_map = plan.host_cover()
-        rows = sharded_decode_blocks(self.store.decoder, uniq, self.mesh,
-                                     self.axes)
+        dec = self.store.decoder
+        dec.launch_rounds_last = []
+        # depth-bucketed fan-out: one sharded launch per resolve-round
+        # group, so a shallow bucket's shards stop after ITS rounds
+        # instead of the archive-wide bound the plan-free path would run.
+        # Routing through the plan (not dec._meta's default) is what makes
+        # depth a plan-level property here, same as the other executors.
+        groups = plan.depth_groups()
+        if groups is None or (len(groups) == 1
+                              and groups[0][0] >= (dec.da.max_depth or 0)):
+            rows = sharded_decode_blocks(dec, uniq, self.mesh, self.axes)
+        else:
+            parts = [sharded_decode_blocks(dec, uniq[idx], self.mesh,
+                                           self.axes, n_rounds=rounds)
+                     for rounds, idx in groups]
+            order = np.concatenate([idx for _, idx in groups])
+            inv = np.empty(uniq.size, np.int64)
+            inv[order] = np.arange(uniq.size)
+            rows = jnp.concatenate(parts, axis=0)[jnp.asarray(inv)]
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=plan.block_size, max_len=plan.max_len)

@@ -114,9 +114,14 @@ class DecodePlan:
                                   # start table (the fetch_reads fast path)
     max_depth: Optional[int] = None  # archive's recorded resolve-round
                                   # bound (v3 depth metadata; None =
-                                  # legacy early-exit decode) — telemetry/
-                                  # cost prediction, the decode kernels
-                                  # read it from the DeviceArchive
+                                  # legacy early-exit decode)
+    block_rounds: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)  # i32[n_blocks] per-block scheduled
+                                  # resolve rounds (pow2 depth buckets,
+                                  # `core.depth.scheduled_rounds`; global
+                                  # blocks carry their anchor window's
+                                  # schedule) — the first-class depth
+                                  # field the executors group launches by
     _cover: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     # ------------------------------------------------------------- geometry
@@ -182,6 +187,29 @@ class DecodePlan:
         return sum(last - first + 1
                    for first, last, _ in self.anchor_windows(anchors))
 
+    # ---------------------------------------------------------- depth groups
+    def depth_groups(self) -> Optional[list]:
+        """The plan's unique covering set partitioned by scheduled resolve
+        rounds: [(n_rounds, idx-into-uniq)], ascending. The executors
+        issue ONE launch per group, so a depth-3 selection of a depth-8
+        archive runs 3 rounds, not 8. None = legacy archive without depth
+        metadata (every launch keeps the early-exit resolver)."""
+        if self.block_rounds is None:
+            return None
+        _, _, _, uniq, _ = self.host_cover()
+        r = self.block_rounds[uniq]
+        return [(int(v), np.flatnonzero(r == v)) for v in np.unique(r)]
+
+    def needed_rounds(self) -> Optional[int]:
+        """Max scheduled rounds over the covering set — the critical-path
+        round count of a bucketed execution. Strictly below `max_depth`
+        exactly when the whole selection avoids the archive's deepest
+        bucket (the case worth rerouting the jitted fast path for)."""
+        if self.block_rounds is None:
+            return None
+        _, _, _, uniq, _ = self.host_cover()
+        return int(self.block_rounds[uniq].max(initial=0))
+
 
 @dataclasses.dataclass
 class CachePlan:
@@ -202,6 +230,11 @@ class CachePlan:
     n_misses: int
     n_installed: int
     n_evicted: int
+    miss_groups: Optional[list] = None  # [(n_rounds, idx-into-miss_blocks)]
+                                # ascending — the miss set partitioned by
+                                # scheduled resolve rounds (None = legacy
+                                # archive). The miss decode buckets these
+                                # into one launch per group.
 
     @property
     def n_uniq(self) -> int:
@@ -231,7 +264,18 @@ class QueryPlanner:
         self.block_size = da.block_size
         self.n_blocks = da.n_blocks
         self.raw_size = da.raw_size
-        self.max_depth = da.max_depth
+
+    # Depth fields come from the LIVE DeviceArchive at plan time, not a
+    # construction-time snapshot — a planner built before depth metadata
+    # was attached (or against a swapped decoder) would otherwise pin
+    # every plan to stale rounds.
+    @property
+    def max_depth(self) -> Optional[int]:
+        return self.store.decoder.da.max_depth
+
+    @property
+    def block_rounds(self) -> Optional[np.ndarray]:
+        return self.store.decoder.block_rounds
 
     # ------------------------------------------------------------ fast paths
     def plan_read_ids(self, ids: np.ndarray) -> DecodePlan:
@@ -255,7 +299,8 @@ class QueryPlanner:
             starts=starts, lengths=lengths, n_queries=ids.size,
             block_size=self.block_size, n_blocks=self.n_blocks,
             max_len=self.store._max_len, max_span=self.store._max_span,
-            device_ids=dev_ids.astype(np.int32), max_depth=self.max_depth)
+            device_ids=dev_ids.astype(np.int32), max_depth=self.max_depth,
+            block_rounds=self.block_rounds)
 
     def plan_records(self, ids: np.ndarray, record_bytes: int) -> DecodePlan:
         """Fixed-size records: arithmetic spans, no index needed (the
@@ -275,7 +320,7 @@ class QueryPlanner:
             block_size=self.block_size, n_blocks=self.n_blocks,
             max_len=record_bytes,
             max_span=record_bytes // self.block_size + 2,
-            max_depth=self.max_depth)
+            max_depth=self.max_depth, block_rounds=self.block_rounds)
 
     def plan_spans(self, starts: np.ndarray, lengths: np.ndarray,
                    max_len: Optional[int] = None) -> DecodePlan:
@@ -307,7 +352,8 @@ class QueryPlanner:
         return DecodePlan(
             starts=starts, lengths=lengths, n_queries=n,
             block_size=self.block_size, n_blocks=self.n_blocks,
-            max_len=max_len, max_span=max_span, max_depth=self.max_depth)
+            max_len=max_len, max_span=max_span, max_depth=self.max_depth,
+            block_rounds=self.block_rounds)
 
     # -------------------------------------------------------------- general
     def resolve(self, addrs: Sequence[Address]

@@ -22,6 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import depth as dpth
 from repro.core import entropy as ent
 from repro.core.format import (FNV_OFFSET, N_STREAMS, S_COMMANDS, S_LENGTHS,
                                S_LITERALS, S_OFFSETS, Archive, MAX_LANES,
@@ -30,6 +31,19 @@ from repro.core.format import (FNV_OFFSET, N_STREAMS, S_COMMANDS, S_LENGTHS,
 
 class BlockDigestError(ValueError):
     """A decoded block's FNV-1a-64 digest does not match the archive's."""
+
+
+def _pad_pow2(ids: np.ndarray, fill=None) -> np.ndarray:
+    """Pad a request batch to the next power of two (bounded jit variants);
+    pad slots repeat the last element — so they add no unique blocks —
+    unless an explicit `fill` is given (e.g. an out-of-range sentinel)."""
+    n = ids.size
+    cap = 1 << max(0, n - 1).bit_length() if n > 1 else 1
+    if cap == n:
+        return ids
+    return np.concatenate(
+        [ids, np.full(cap - n, ids[-1] if fill is None else fill,
+                      ids.dtype)])
 
 
 def _check_window_bytes(first: int, last: int, block_size: int) -> None:
@@ -446,6 +460,38 @@ class Decoder:
         }
         self._store_view = None
         self.decoded_blocks_last = 0
+        # ---- depth-bucketed round schedule (PR 6) ----
+        # per-block resolve-round counts, pow2-bucketed archive-wide
+        # (core.depth.scheduled_rounds): a selection decodes in one launch
+        # per distinct scheduled count, so a shallow selection of a deep
+        # archive runs its own bucket's rounds instead of the archive
+        # bound. "ra" blocks schedule individually; global/wavefront
+        # chains cross blocks, so the schedule is per anchor window (a
+        # block inherits its window's bucketed max). None = legacy
+        # depth-free archive: every launch keeps the early-exit resolver.
+        bd = self.da.block_depth
+        if bd is None:
+            self._block_rounds = None
+        elif self.da.mode == "ra":
+            self._block_rounds = dpth.scheduled_rounds(bd)
+        else:
+            anchors = np.asarray(archive.anchors, np.int64)
+            n_blocks = self.da.n_blocks
+            win_of = (np.searchsorted(anchors, np.arange(n_blocks),
+                                      "right") - 1
+                      if anchors.size else np.zeros(n_blocks, np.int64))
+            wdepth = np.zeros(int(win_of.max(initial=0)) + 1, np.int64)
+            np.maximum.at(wdepth, win_of, bd.astype(np.int64))
+            self._block_rounds = dpth.scheduled_rounds(wdepth)[win_of]
+        # archives whose blocks all share one scheduled count cannot
+        # benefit from bucketing (the single bucket IS the archive bound)
+        # — executors read this to skip the host covering-set math
+        self.multi_bucket = (self._block_rounds is not None
+                             and np.unique(self._block_rounds).size > 1)
+        # per decode call: the static n_rounds of every launch it issued,
+        # in launch order (None = legacy early-exit launch) — the round
+        # instrumentation the scheduling tests and bench histogram read
+        self.launch_rounds_last: list = []
         # global mode, opt-in (collect_window_rows=True): the decode
         # records (first_block_id, (L, block_size) rows) per anchor
         # window it materialized, so the BlockCache can co-install them
@@ -468,14 +514,48 @@ class Decoder:
             self._store_view.executor = DeviceExecutor(self._store_view)
         return self._store_view
 
-    def _meta(self, n_sel: int, total: Optional[int] = None):
+    def _meta(self, n_sel: int, total: Optional[int] = None,
+              n_rounds: Optional[int] = -1):
+        """Static geometry tuple for a decode launch. `n_rounds` overrides
+        the resolve-round count of THIS launch (the depth-bucketed
+        schedule); the default sentinel keeps the archive-wide bound."""
         da = self.da
         if total is None:
             total = da.n_blocks * da.block_size if da.mode == "global" \
                 else None
+        rounds = da.max_depth if n_rounds == -1 else n_rounds
         return (da.block_size, da.n_blocks, da.max_cmds, da.t_max_lit,
                 da.t_max_cmd, da.mode, da.entropy, da.offset_bytes, total,
-                self._freqs_host, da.max_depth)
+                self._freqs_host, rounds)
+
+    # ------------------------------------------------- depth-bucket schedule
+    @property
+    def block_rounds(self) -> Optional[np.ndarray]:
+        """i32[n_blocks] scheduled resolve rounds per block (pow2 depth
+        buckets; global blocks inherit their anchor window's schedule), or
+        None for legacy depth-free archives."""
+        return self._block_rounds
+
+    def _rounds_for_span(self, first: int, last: int) -> Optional[int]:
+        """Scheduled rounds for a contiguous window decode [first, last]:
+        the max over its blocks (== over its anchor windows)."""
+        if self._block_rounds is None:
+            return self.da.max_depth        # None: legacy early-exit
+        return int(self._block_rounds[first:last + 1].max(initial=0))
+
+    def _ra_groups(self, sel_np: np.ndarray) -> Optional[list]:
+        """Partition an "ra" selection by scheduled rounds: [(n_rounds,
+        idx-into-sel)] ascending. None = no bucketing possible or useful
+        (legacy archive, empty selection, or one group already at the
+        archive-wide bound — the existing single-launch path is
+        identical then)."""
+        if self._block_rounds is None or sel_np.size == 0:
+            return None
+        r = self._block_rounds[sel_np]
+        vals = np.unique(r)
+        if vals.size == 1 and int(vals[0]) == (self.da.max_depth or 0):
+            return None
+        return [(int(v), np.flatnonzero(r == v)) for v in vals]
 
     def verify_rows(self, sel, rows: jnp.ndarray) -> None:
         """Recompute each decoded row's 8-byte-stride FNV-1a-64 on device
@@ -506,9 +586,12 @@ class Decoder:
         L = last - first + 1
         _check_window_bytes(first, last, self.da.block_size)
         wsel = jnp.arange(first, last + 1, dtype=jnp.int32)
+        n_rounds = self._rounds_for_span(first, last)
         flat = _decode_sel_jit(self.arrays, wsel,
-                               self._meta(L, total=L * self.da.block_size),
+                               self._meta(L, total=L * self.da.block_size,
+                                          n_rounds=n_rounds),
                                self.backend)
+        self.launch_rounds_last.append(n_rounds)
         self.decoded_blocks_last += L
         rows = flat.reshape(L, self.da.block_size)
         if self.collect_window_rows:
@@ -547,6 +630,7 @@ class Decoder:
         win_first = int(anchor_floor(np.asarray([first]),
                                      self.archive.anchors)[0])
         self.decoded_blocks_last = 0
+        self.launch_rounds_last = []
         self.last_window_rows = []
         out = self._window_rows(win_first, last)[first - win_first:]
         if verify:
@@ -559,6 +643,7 @@ class Decoder:
         selection is grouped by governing anchor so one call never decodes
         across windows it does not need."""
         self.decoded_blocks_last = 0
+        self.launch_rounds_last = []
         self.last_window_rows = []
         if sel_np.size == 0:
             return jnp.zeros((0, self.da.block_size), jnp.uint8)
@@ -573,20 +658,56 @@ class Decoder:
             return rows[sel_np]
         return self._assemble_groups(sel_np, self._window_rows)
 
-    def decode_blocks(self, sel, verify: bool = False) -> jnp.ndarray:
+    def _assemble_ra_groups(self, sel_np: np.ndarray, groups: list,
+                            decode_group, pad_groups: bool) -> jnp.ndarray:
+        """Depth-bucketed "ra" decode: one launch per scheduled-rounds
+        group via `decode_group(gsel i32[Gp], n_rounds) -> (Gp, bs)`,
+        reassembled in the selection's original order. `pad_groups` pow2-
+        pads each group (bounded jit retraces — the serving/cache paths);
+        the streaming path passes False to keep its exact-size budget
+        accounting."""
+        pieces, order, n_mat = [], [], 0
+        for rounds, idx in groups:
+            gsel = sel_np[idx].astype(np.int32)
+            g = _pad_pow2(gsel) if pad_groups else gsel
+            rows = decode_group(g, rounds)
+            self.launch_rounds_last.append(rounds)
+            n_mat += int(g.size)
+            pieces.append(rows[:idx.size])
+            order.append(idx)
+        order = np.concatenate(order)
+        inv = np.empty(order.size, np.int64)
+        inv[order] = np.arange(order.size)
+        self.decoded_blocks_last = n_mat
+        return jnp.concatenate(pieces, axis=0)[inv]
+
+    def decode_blocks(self, sel, verify: bool = False,
+                      pad_groups: bool = True) -> jnp.ndarray:
+        self.launch_rounds_last = []
         sel = jnp.asarray(sel, jnp.int32)
         if self.da.mode == "global":
             out = self._decode_global_rows(np.asarray(sel, np.int64))
         else:
-            out = _decode_sel_jit(self.arrays, sel, self._meta(len(sel)),
-                                  self.backend)
-            self.decoded_blocks_last = int(sel.shape[0])
+            sel_np = np.asarray(sel, np.int64).reshape(-1)
+            groups = self._ra_groups(sel_np)
+            if groups is None:
+                out = _decode_sel_jit(self.arrays, sel,
+                                      self._meta(len(sel)), self.backend)
+                self.launch_rounds_last.append(self.da.max_depth)
+                self.decoded_blocks_last = int(sel.shape[0])
+            else:
+                out = self._assemble_ra_groups(
+                    sel_np, groups,
+                    lambda g, r: _decode_sel_jit(
+                        self.arrays, jnp.asarray(g),
+                        self._meta(g.size, n_rounds=r), self.backend),
+                    pad_groups)
         if verify:
             self.verify_rows(np.asarray(sel), out)
         return out
 
-    def decode_blocks_host_entropy(self, sel, verify: bool = False
-                                   ) -> jnp.ndarray:
+    def decode_blocks_host_entropy(self, sel, verify: bool = False,
+                                   pad_groups: bool = True) -> jnp.ndarray:
         """Mode 1: host entropy + device match. Global selections decode
         per anchor window ([0, max(sel)] when anchor-free) so every
         cross-block match reference resolves inside the decoded window —
@@ -594,6 +715,7 @@ class Decoder:
         sel = np.asarray(sel)
         a = self.archive
         max_cmds = int(a.n_cmds.max(initial=1))
+        self.launch_rounds_last = []
         if a.mode == "global":
             self.decoded_blocks_last = 0
             self.last_window_rows = []
@@ -609,13 +731,15 @@ class Decoder:
                 # low-32-bit window base: the i32 wraparound rebase in
                 # _match_phase is exact for archives starting past 2 GiB
                 wb = int(np.int64(a.block_start[first]).astype(np.int32))
+                n_rounds = self._rounds_for_span(first, last)
                 flat = _match_phase(
                     "global", streams, jnp.asarray(a.n_cmds[wsel]),
                     jnp.asarray(a.block_len[wsel]),
                     jnp.asarray(a.block_start[wsel].astype(np.int32)),
                     a.block_size, max_cmds, self.backend, a.offset_bytes,
                     total_size=L * a.block_size, win_base=wb,
-                    n_rounds=self.da.max_depth)
+                    n_rounds=n_rounds)
+                self.launch_rounds_last.append(n_rounds)
                 self.decoded_blocks_last += L
                 rows = flat.reshape(L, a.block_size)
                 if self.collect_window_rows:
@@ -624,14 +748,24 @@ class Decoder:
 
             out = self._assemble_groups(sel64, window_rows)
         else:
-            streams = _entropy_decode_host(a, sel)
-            out = _match_phase(
-                a.mode, streams, jnp.asarray(a.n_cmds[sel]),
-                jnp.asarray(a.block_len[sel]),
-                jnp.asarray(a.block_start[sel].astype(np.int32)),
-                a.block_size, max_cmds, self.backend, a.offset_bytes, None,
-                n_rounds=self.da.max_depth)
-            self.decoded_blocks_last = int(sel.size)
+            def match_group(gsel: np.ndarray, n_rounds) -> jnp.ndarray:
+                streams = _entropy_decode_host(a, gsel)
+                return _match_phase(
+                    a.mode, streams, jnp.asarray(a.n_cmds[gsel]),
+                    jnp.asarray(a.block_len[gsel]),
+                    jnp.asarray(a.block_start[gsel].astype(np.int32)),
+                    a.block_size, max_cmds, self.backend, a.offset_bytes,
+                    None, n_rounds=n_rounds)
+
+            sel_np = sel.astype(np.int64).reshape(-1)
+            groups = self._ra_groups(sel_np)
+            if groups is None:
+                out = match_group(sel_np, self.da.max_depth)
+                self.launch_rounds_last.append(self.da.max_depth)
+                self.decoded_blocks_last = int(sel.size)
+            else:
+                out = self._assemble_ra_groups(sel_np, groups, match_group,
+                                               pad_groups)
         if verify:
             self.verify_rows(sel, out)
         return out

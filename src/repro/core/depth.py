@@ -126,3 +126,45 @@ def window_depths(block_ptrs: list, block_lens: np.ndarray,
 def log2_rounds(out_size: int) -> int:
     """The depth-free worst case the resolver historically ran."""
     return max(1, int(np.ceil(np.log2(max(out_size, 2)))))
+
+
+# ------------------------------------------------------- depth buckets (PR 6)
+def depth_bucket(depth) -> np.ndarray:
+    """Pow2 depth-bucket id: 0 → {0}, 1 → {1}, 2 → {2}, 3 → {3, 4},
+    4 → {5..8}, 5 → {9..16}, ... — bucket b holds depths in
+    (2^(b-2), 2^(b-1)] for b >= 2.
+
+    Bucketing bounds the number of distinct `n_rounds` values a decode
+    schedule can produce to ~log2(max_depth) + 2 per archive, which is
+    what keeps the per-bucket launches from retracing the jitted decode
+    once per distinct depth."""
+    d = np.asarray(depth, np.int64)
+    out = np.where(d <= 0, 0,
+                   np.ceil(np.log2(np.maximum(d, 1))).astype(np.int64) + 1)
+    return out if out.shape else out[()]
+
+
+def scheduled_rounds(block_depth: np.ndarray) -> np.ndarray:
+    """Per-block resolve-round schedule: each block runs the MAX depth of
+    its archive-wide pow2 bucket (i32, same shape as `block_depth`).
+
+    The schedule is archive-static — every selection of the same blocks
+    runs the same per-bucket round counts — so the jitted decode sees at
+    most one trace per (bucket, selection-shape) pair, and the tightness
+    invariant holds: some block in each bucket needs exactly the bucket's
+    scheduled count, so `scheduled - 1` rounds corrupts."""
+    d = np.asarray(block_depth, np.int64).reshape(-1)
+    if d.size == 0:
+        return np.zeros(0, np.int32)
+    b = depth_bucket(d)
+    sched = np.zeros(int(b.max(initial=0)) + 1, np.int64)
+    np.maximum.at(sched, b, d)
+    return sched[b].astype(np.int32)
+
+
+def bucket_histogram(rounds: np.ndarray) -> dict:
+    """{scheduled_rounds: block_count} over a per-block schedule — the
+    compact derived-field form the bench rows and `bench_compare` print."""
+    r = np.asarray(rounds, np.int64).reshape(-1)
+    vals, counts = np.unique(r, return_counts=True)
+    return {int(v): int(c) for v, c in zip(vals, counts)}

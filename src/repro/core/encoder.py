@@ -37,13 +37,53 @@ def _planes_u64(vals: np.ndarray) -> np.ndarray:
                            for b in range(8)])
 
 
+def validate_encode_params(block_size: int, mode: str, entropy: str,
+                           anchor_interval: int, raw_size: int = 0,
+                           origin: int = 0) -> None:
+    """Raise ValueError on any invalid encode-knob combination.
+
+    The single home of the knob constraints, shared by `encode()` and the
+    `repro.tune` grid sweep (which must reject a grid point up front with
+    a reason instead of raising mid-sweep)."""
+    if block_size <= 0:
+        raise ValueError(f"block_size must be positive, got {block_size}")
+    if mode not in ("ra", "global"):
+        raise ValueError(f'mode must be "ra" or "global", got {mode!r}')
+    if entropy not in ("rans", "raw"):
+        raise ValueError(f"unknown entropy backend {entropy!r}")
+    if anchor_interval < 0:
+        raise ValueError(
+            f"anchor_interval must be >= 0, got {anchor_interval}")
+    if anchor_interval and mode != "global":
+        raise ValueError(
+            'anchor_interval only applies to mode="global" ("ra" blocks '
+            "are already self-contained restart points)")
+    if origin < 0:
+        raise ValueError(f"origin must be >= 0, got {origin}")
+    if mode == "global":
+        # the device match phase resolves a decode window in one flat
+        # int32 pointer space, so a single window must span < 2^31 bytes;
+        # anchor-free archives decode whole-prefix (one raw_size window)
+        if not anchor_interval and raw_size >= 2**31:
+            raise ValueError(
+                f"anchor-free global archives decode as ONE {raw_size}-byte "
+                f"window, past the device's 2 GiB flat pointer space — "
+                f"encode with anchor_interval to bound windows")
+        if anchor_interval and anchor_interval * block_size >= 2**31:
+            raise ValueError(
+                f"anchor window spans {anchor_interval} x {block_size} "
+                f">= 2 GiB — the device flat pointer space is int32; "
+                f"use a smaller anchor_interval")
+
+
 def encode(data: bytes | np.ndarray,
            block_size: int = DEFAULT_BLOCK_SIZE,
            mode: str = "ra",
            entropy: str = "rans",
            hash_bits: int = 17,
            anchor_interval: int = 0,
-           origin: int = 0) -> Archive:
+           origin: int = 0,
+           profile=None) -> Archive:
     """Compress `data` into an ACEAPEX archive.
 
     `anchor_interval` (global mode only) emits a wavefront restart point
@@ -59,34 +99,32 @@ def encode(data: bytes | np.ndarray,
     match offsets are recorded relative to that origin. Block-level decode
     APIs are origin-transparent; byte-addressed query-plane entry points
     assume origin == 0.
+
+    `profile` (a `repro.tune.EncodeProfile`) supplies block_size / mode /
+    entropy / anchor_interval in one declared object — the autotuner's
+    output; explicit keyword knobs must not also be passed alongside it.
     """
+    if profile is not None:
+        defaults = dict(block_size=DEFAULT_BLOCK_SIZE, mode="ra",
+                        entropy="rans", anchor_interval=0)
+        given = dict(block_size=block_size, mode=mode, entropy=entropy,
+                     anchor_interval=anchor_interval)
+        clash = [k for k, v in given.items() if v != defaults[k]]
+        if clash:
+            raise ValueError(
+                f"encode(profile=...) also got explicit {clash} — the "
+                f"profile owns those knobs; drop one or the other")
+        block_size = profile.block_size
+        mode = profile.mode
+        entropy = profile.entropy
+        anchor_interval = profile.anchor_interval
     data = np.frombuffer(data, np.uint8) if isinstance(data, (bytes, bytearray)) \
         else np.ascontiguousarray(data, np.uint8)
     n = data.shape[0]
     anchor_interval = int(anchor_interval)
     origin = int(origin)
-    if anchor_interval < 0:
-        raise ValueError(f"anchor_interval must be >= 0, got {anchor_interval}")
-    if anchor_interval and mode != "global":
-        raise ValueError(
-            'anchor_interval only applies to mode="global" ("ra" blocks '
-            "are already self-contained restart points)")
-    if origin < 0:
-        raise ValueError(f"origin must be >= 0, got {origin}")
-    if mode == "global":
-        # the device match phase resolves a decode window in one flat
-        # int32 pointer space, so a single window must span < 2^31 bytes;
-        # anchor-free archives decode whole-prefix (one n-byte window)
-        if not anchor_interval and n >= 2**31:
-            raise ValueError(
-                f"anchor-free global archives decode as ONE {n}-byte "
-                f"window, past the device's 2 GiB flat pointer space — "
-                f"encode with anchor_interval to bound windows")
-        if anchor_interval and anchor_interval * block_size >= 2**31:
-            raise ValueError(
-                f"anchor window spans {anchor_interval} x {block_size} "
-                f">= 2 GiB — the device flat pointer space is int32; "
-                f"use a smaller anchor_interval")
+    validate_encode_params(block_size, mode, entropy, anchor_interval,
+                           raw_size=n, origin=origin)
     # "ra" offsets are block-local; two planes hold them only while the
     # block fits 16 bits. Larger blocks (e.g. PAPER1_BLOCK_SIZE) switch to
     # four planes — storing a >=64 KiB offset in two would silently

@@ -39,7 +39,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.decoder import Decoder, _decode_sel_core
+from repro.core.decoder import Decoder, _decode_sel_core, _pad_pow2
 from repro.core.format import Archive
 from repro.core.index import ReadIndex, split_starts
 
@@ -131,19 +131,6 @@ _fetch_dev_jit = partial(jax.jit,
                              _fetch_dev_core)
 
 
-def _pad_pow2(ids: np.ndarray, fill=None) -> np.ndarray:
-    """Pad a request batch to the next power of two (bounded jit variants);
-    pad slots repeat the last element — so they add no unique blocks —
-    unless an explicit `fill` is given (e.g. an out-of-range sentinel)."""
-    n = ids.size
-    cap = 1 << max(0, n - 1).bit_length() if n > 1 else 1
-    if cap == n:
-        return ids
-    return np.concatenate(
-        [ids, np.full(cap - n, ids[-1] if fill is None else fill,
-                      ids.dtype)])
-
-
 class CompressedResidentStore:
     """Archive + index resident on device; decode-on-demand reads.
 
@@ -170,7 +157,8 @@ class CompressedResidentStore:
         if self._cache_cap > 0:
             from repro.api.cache import BlockCache
             self._cache = BlockCache(self._cache_cap, self.block_size,
-                                     archive.n_blocks, policy=cache_policy)
+                                     archive.n_blocks, policy=cache_policy,
+                                     block_rounds=self.decoder.block_rounds)
         else:
             self._cache = None
         if index is not None:

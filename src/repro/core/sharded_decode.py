@@ -26,11 +26,15 @@ from repro.core.decoder import Decoder, _decode_sel_core
 
 
 def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
-                          axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+                          axes: Tuple[str, ...] = ("data",),
+                          n_rounds: int = -1) -> jnp.ndarray:
     """Decode `sel` blocks with the work sharded over `axes` of `mesh`.
 
     Returns (len(sel), block_size) u8, sharded over axes on dim 0. `sel` is
     padded to a multiple of the axis size (dup blocks, cropped after).
+    `n_rounds` bounds the pointer-resolve rounds for this launch (-1 = the
+    archive-wide `max_depth`); ShardedExecutor passes each depth bucket's
+    schedule so shallow shards stop early.
     """
     if dec.da.mode == "global":
         # a shard's selection is an arbitrary block subset, but global
@@ -48,7 +52,9 @@ def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
     if pad:
         sel = np.concatenate([sel, np.repeat(sel[-1:], pad)])
 
-    meta = dec._meta(len(sel))
+    meta = dec._meta(len(sel), n_rounds=n_rounds)
+    dec.launch_rounds_last.append(
+        dec.da.max_depth if n_rounds == -1 else n_rounds)
     backend = dec.backend
     arrays = dec.arrays
 

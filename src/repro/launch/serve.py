@@ -34,6 +34,12 @@ def main():
     ap.add_argument("--cache-policy", default="lru",
                     choices=("lru", "freq"),
                     help="block cache eviction/admission policy")
+    ap.add_argument("--tune-target", default="seek",
+                    choices=("seek", "ratio", "throughput"),
+                    help="autotuner objective for the encode profile "
+                         "(serving is seek-bound, so 'seek' by default)")
+    ap.add_argument("--tune-sample-kb", type=int, default=256,
+                    help="corpus sample the tuner sweeps, in KiB")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -44,9 +50,14 @@ def main():
     params = model.init(jax.random.key(0))
 
     corpus = make_fastq("platinum", n_reads=3000, seed=0)
-    ga = GenomicArchive.from_bytes(corpus, block_size=16 * 1024,
-                                   cache_blocks=args.cache_blocks,
-                                   cache_policy=args.cache_policy)
+    # encode knobs come from the autotuner's declared objective, not a
+    # hand-tuned constant: sweep the grid on a corpus sample, take the
+    # Pareto point for the serving-relevant target
+    ga = GenomicArchive.create(corpus, target=args.tune_target,
+                               sample_bytes=args.tune_sample_kb << 10,
+                               cache_blocks=args.cache_blocks,
+                               cache_policy=args.cache_policy)
+    print(f"tuned profile [{args.tune_target}]: {ga.profile.describe()}")
     st = ga.stats()
     print(f"resident: {st.compressed_device_bytes:,}B compressed of "
           f"{st.raw_size:,}B ({st.residency_fraction_of_raw:.1%}), "

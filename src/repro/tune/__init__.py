@@ -1,0 +1,12 @@
+"""Profile-guided encode autotuning: knob grid sweep → Pareto frontier →
+`EncodeProfile` for a declared objective. See `repro.tune.autotune`."""
+from repro.tune.autotune import (TunePoint, TuneResult, autotune,
+                                 default_grid, pareto_frontier,
+                                 validate_grid)
+from repro.tune.measure import measure_point, time_fn
+from repro.tune.profile import EncodeProfile
+
+__all__ = [
+    "EncodeProfile", "TunePoint", "TuneResult", "autotune", "default_grid",
+    "measure_point", "pareto_frontier", "time_fn", "validate_grid",
+]

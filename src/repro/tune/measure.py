@@ -1,0 +1,49 @@
+"""Measurement primitives shared by the autotuner and the benchmarks.
+
+`time_fn` is the repo's one best-of-N wall-clock timer (historically in
+`benchmarks.common`, which now re-exports it from here): the tuner sweeps
+a knob grid with the SAME timing discipline the bench tables use, so a
+profile picked here predicts the numbers `benchmarks.run` reports.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Best-of-N wall time in seconds (after warmup), blocking on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_point(archive, decoder, sample_bytes: int, iters: int = 3
+                  ) -> dict:
+    """Ratio / seek-latency / decode-throughput of one encoded sample.
+
+    Returns the three objective axes the Pareto frontier is computed
+    over: `ratio` (raw/compressed, higher better), `seek_us` (one-block
+    random access at the archive's midpoint, lower better), and
+    `decode_GBps` (whole-sample selection decode, higher better).
+    """
+    n_blocks = archive.n_blocks
+    sel_all = np.arange(n_blocks)
+    t_full = time_fn(lambda: decoder.decode_blocks(sel_all), iters=iters)
+    one = np.array([n_blocks // 2])
+    t_seek = time_fn(lambda: decoder.decode_blocks(one), iters=iters)
+    return {
+        "ratio": float(archive.ratio),
+        "seek_us": t_seek * 1e6,
+        "decode_GBps": sample_bytes / max(t_full, 1e-12) / 1e9,
+    }

@@ -49,13 +49,17 @@ def test_depth_recorded_exact_and_tight():
     assert a.max_depth < log2_rounds(4096)      # and far below the log-N cap
     d = dec.Decoder(a, backend="ref")
     assert np.array_equal(_decode_all_rows(d, a), raw)
-    # tightness: one round fewer leaves unresolved pointers
-    short = dec.Decoder(a, backend="ref")
-    short.da = dataclasses.replace(short.da, max_depth=a.max_depth - 1)
+    # tightness: one round fewer leaves unresolved pointers (clamp the
+    # recorded depths BEFORE construction — launch rounds come from the
+    # per-block schedule built in __init__, not from da.max_depth)
+    short = dec.Decoder(dataclasses.replace(
+        a, block_depth=np.minimum(a.block_depth, a.max_depth - 1)),
+        backend="ref")
     assert not np.array_equal(_decode_all_rows(short, a), raw)
     # and the historical fixed log-N round count is bit-identical
-    logn = dec.Decoder(a, backend="ref")
-    logn.da = dataclasses.replace(logn.da, max_depth=log2_rounds(4096))
+    logn = dec.Decoder(dataclasses.replace(
+        a, block_depth=np.full_like(a.block_depth, log2_rounds(4096))),
+        backend="ref")
     assert np.array_equal(_decode_all_rows(logn, a), raw)
 
 

@@ -1,0 +1,273 @@
+"""Depth-bucketed decode scheduling: per-block/per-window scheduled
+rounds (`core.depth.scheduled_rounds`), one launch per pow2 depth bucket
+across the query plane, bit-identical to the archive-wide bound and
+strictly fewer rounds for shallow selections."""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from repro.api.address import ByteRange
+from repro.api.executors import DeviceExecutor, StreamingExecutor
+from repro.api.plan import QueryPlanner
+from repro.core import decoder as dec
+from repro.core import encoder as enc
+from repro.core.depth import bucket_histogram, depth_bucket, scheduled_rounds
+from repro.core.residency import CompressedResidentStore
+from tests.test_depth import deep_chain_payload
+
+
+@functools.lru_cache(maxsize=None)
+def mixed_payload(block_size: int) -> bytes:
+    """Deep-chain head + incompressible tail: the head's blocks land in a
+    high depth bucket, the tail's in bucket 0 — a genuinely mixed-depth
+    archive (the single-bucket case falls back to one launch)."""
+    rng = np.random.default_rng(3)
+    head = deep_chain_payload(2 * block_size, seg=min(1024, block_size // 4),
+                              seed=1)
+    tail = rng.integers(0, 256, 2 * block_size, dtype=np.uint8)
+    return np.concatenate([head, tail]).tobytes()
+
+
+def _ref(data: bytes) -> np.ndarray:
+    return np.frombuffer(data, np.uint8)
+
+
+def _rows_concat(a, rows: np.ndarray) -> np.ndarray:
+    return np.concatenate([np.asarray(rows)[i, :int(a.block_len[i])]
+                           for i in range(a.n_blocks)])
+
+
+# -------------------------------------------------------------- bucket math
+def test_depth_bucket_pow2_partition():
+    d = np.array([0, 1, 2, 3, 4, 5, 8, 9, 16, 17])
+    b = depth_bucket(d)
+    assert b.tolist() == [0, 1, 2, 3, 3, 4, 4, 5, 5, 6]
+    assert int(depth_bucket(7)) == 4
+
+
+def test_scheduled_rounds_bucket_max():
+    """Every block runs its bucket's max depth — never less than its own
+    depth (correctness), never more than the bucket max (the bound the
+    tightness test pins)."""
+    d = np.array([0, 1, 3, 4, 5, 7, 8, 0])
+    r = scheduled_rounds(d)
+    assert (r >= d).all()
+    assert r.tolist() == [0, 1, 4, 4, 8, 8, 8, 0]
+    assert scheduled_rounds(np.zeros(0, np.int64)).shape == (0,)
+
+
+def test_bucket_histogram():
+    assert bucket_histogram(np.array([0, 4, 4, 8])) == {0: 1, 4: 2, 8: 1}
+
+
+# -------------------------------------------------- decoder-level scheduling
+def test_mixed_archive_builds_multi_bucket_schedule():
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    assert d.block_rounds is not None
+    assert d.block_rounds.shape == (a.n_blocks,)
+    assert (d.block_rounds >= a.block_depth).all()     # never under-resolve
+    assert d.multi_bucket
+    assert int(d.block_rounds.max()) == a.max_depth    # top bucket is tight
+
+
+@pytest.mark.parametrize("mode,interval", [("ra", 0), ("global", 2),
+                                           ("global", 0)])
+@pytest.mark.parametrize("entropy", ["rans", "raw"])
+@pytest.mark.parametrize("block_size", [16 * 1024, 64 * 1024])
+def test_bucketed_decode_bit_identical_sweep(mode, interval, entropy,
+                                             block_size):
+    """Acceptance sweep: bucketed decode == archive-wide max_depth decode,
+    bit-for-bit, across mode x entropy x block size, on both decode
+    modes (device entropy and host entropy)."""
+    data = mixed_payload(block_size)
+    a = enc.encode(data, block_size=block_size, mode=mode, entropy=entropy,
+                   anchor_interval=interval)
+    d = dec.Decoder(a, backend="ref")
+    ref = _ref(data)
+    got = _rows_concat(a, d.decode_blocks(np.arange(a.n_blocks)))
+    assert np.array_equal(got, ref)
+    # the unbucketed reference: every launch at the archive-wide bound
+    flat = dec.Decoder(a, backend="ref")
+    flat._block_rounds = None
+    assert np.array_equal(
+        _rows_concat(a, flat.decode_blocks(np.arange(a.n_blocks))), ref)
+    assert flat.launch_rounds_last.count(a.max_depth) >= 1
+    # scattered partial selection, both modes
+    sel = np.array([a.n_blocks - 1, 0, a.n_blocks // 2])
+    r_bucketed = np.asarray(d.decode_blocks(sel))
+    assert np.array_equal(r_bucketed, np.asarray(flat.decode_blocks(sel)))
+    assert np.array_equal(r_bucketed,
+                          np.asarray(d.decode_blocks_host_entropy(sel)))
+
+
+def test_shallow_selection_runs_fewer_rounds():
+    """The headline property: a selection inside the shallow bucket decodes
+    with strictly fewer resolve rounds than the archive-wide bound, on
+    both decode modes."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    shallow = np.flatnonzero(d.block_rounds < a.max_depth)
+    assert shallow.size
+    rows = np.asarray(d.decode_blocks(shallow))
+    assert d.launch_rounds_last
+    assert max(d.launch_rounds_last) < a.max_depth
+    for i, b in enumerate(shallow):
+        ln = int(a.block_len[b])
+        s = int(b) * 4096
+        assert np.array_equal(rows[i, :ln], _ref(data)[s:s + ln])
+    np.asarray(d.decode_blocks_host_entropy(shallow))
+    assert max(d.launch_rounds_last) < a.max_depth
+
+
+def test_mixed_selection_one_launch_per_bucket():
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    d.decode_blocks(np.arange(a.n_blocks))
+    expect = sorted(int(v) for v in np.unique(d.block_rounds))
+    assert d.launch_rounds_last == expect
+
+
+def test_bucket_schedule_is_tight():
+    """One round fewer than a bucket's schedule corrupts some block of
+    that bucket (the bucket max is achieved, so the schedule cannot be
+    shaved)."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    d = dec.Decoder(a, backend="ref")
+    r_max = int(d.block_rounds.max())
+    assert r_max == a.max_depth and r_max > 1
+    sel = np.flatnonzero(d.block_rounds == r_max).astype(np.int32)
+    import jax.numpy as jnp
+    ok = np.asarray(dec._decode_sel_jit(
+        d.arrays, jnp.asarray(sel), d._meta(sel.size, n_rounds=r_max),
+        d.backend))
+    short = np.asarray(dec._decode_sel_jit(
+        d.arrays, jnp.asarray(sel), d._meta(sel.size, n_rounds=r_max - 1),
+        d.backend))
+    assert not np.array_equal(short, ok)
+
+
+def test_legacy_depth_free_archive_falls_back():
+    """block_depth=None archives keep the early-exit single-launch path
+    byte-for-byte: no schedule, no bucketing, launches record None."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    legacy = dataclasses.replace(a, block_depth=None)
+    d = dec.Decoder(legacy, backend="ref")
+    assert d.block_rounds is None and not d.multi_bucket
+    got = _rows_concat(legacy, d.decode_blocks(np.arange(a.n_blocks)))
+    assert np.array_equal(got, _ref(data))
+    assert d.launch_rounds_last == [None]
+
+
+def test_global_anchored_schedule_is_per_window():
+    """Global blocks inherit their anchor window's schedule — chains cross
+    block boundaries inside a window, so a per-block schedule would
+    under-resolve late blocks of a deep window."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096, mode="global", anchor_interval=2)
+    d = dec.Decoder(a, backend="ref")
+    win_of = np.searchsorted(a.anchors, np.arange(a.n_blocks), "right") - 1
+    for w in np.unique(win_of):
+        blocks = np.flatnonzero(win_of == w)
+        assert np.unique(d.block_rounds[blocks]).size == 1
+        assert int(d.block_rounds[blocks][0]) >= int(
+            a.block_depth[blocks].max())
+    got = _rows_concat(a, d.decode_blocks(np.arange(a.n_blocks)))
+    assert np.array_equal(got, _ref(data))
+
+
+# ------------------------------------------------------- query-plane wiring
+def test_plan_carries_block_rounds_live():
+    """Plans read depth from the LIVE decoder (regression: QueryPlanner
+    used to snapshot max_depth at construction)."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    s = CompressedResidentStore(a)
+    planner = QueryPlanner(s)
+    plan = planner.plan_spans(np.array([0]), np.array([5000]))
+    assert plan.max_depth == a.max_depth
+    assert np.array_equal(plan.block_rounds, s.decoder.block_rounds)
+    assert plan.needed_rounds() == int(s.decoder.block_rounds[:2].max())
+    # swap in a legacy decoder: the SAME planner now plans depth-free
+    s.decoder = dec.Decoder(dataclasses.replace(a, block_depth=None),
+                            backend="ref")
+    plan2 = planner.plan_spans(np.array([0]), np.array([5000]))
+    assert planner.max_depth is None
+    assert plan2.max_depth is None and plan2.block_rounds is None
+    assert plan2.depth_groups() is None and plan2.needed_rounds() is None
+
+
+def test_device_executor_shallow_reroutes_and_matches():
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    s = CompressedResidentStore(a)
+    planner = QueryPlanner(s)
+    d = s.decoder
+    shallow_b = int(np.flatnonzero(d.block_rounds < a.max_depth)[0])
+    lo = shallow_b * 4096 + 10
+    plan = planner.plan_spans(np.array([lo]), np.array([3000]))
+    assert plan.needed_rounds() < a.max_depth
+    out, lens = DeviceExecutor(s).run(plan)
+    assert bytes(np.asarray(out[0, :int(lens[0])])) == data[lo:lo + 3000]
+    assert d.launch_rounds_last and max(d.launch_rounds_last) < a.max_depth
+    # a deep selection keeps the fused jitted path (no launches recorded
+    # by the staged decoder entry points)
+    plan_deep = planner.plan_spans(np.array([100]), np.array([3000]))
+    assert plan_deep.needed_rounds() == a.max_depth
+    out2, lens2 = DeviceExecutor(s).run(plan_deep)
+    assert bytes(np.asarray(out2[0, :3000])) == data[100:100 + 3100][:3000]
+
+
+def test_cached_miss_path_buckets():
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    s = CompressedResidentStore(a, cache_blocks=a.n_blocks)
+    planner = QueryPlanner(s)
+    plan = planner.plan_spans(np.array([0]),
+                              np.array([a.n_blocks * 4096 - 100]))
+    out, lens = DeviceExecutor(s).run(plan)
+    got = np.asarray(out[0, :int(lens[0])])
+    assert bytes(got) == data[:a.n_blocks * 4096 - 100]
+    info = s.cache_info()
+    assert info["decode_launches"] == 1        # ONE miss-set decode call…
+    # …which internally issued one launch per depth bucket
+    hist = bucket_histogram(s.decoder.launch_rounds_last)
+    assert len(hist) == np.unique(s.decoder.block_rounds).size
+    # CachePlan exposes the miss grouping
+    s2 = CompressedResidentStore(a, cache_blocks=a.n_blocks)
+    cp = s2._cache.plan(np.arange(a.n_blocks))
+    assert cp.miss_groups is not None
+    assert sorted(r for r, _ in cp.miss_groups) == sorted(
+        int(v) for v in np.unique(s2.decoder.block_rounds))
+    assert np.array_equal(
+        np.sort(np.concatenate([i for _, i in cp.miss_groups])),
+        np.arange(a.n_blocks))
+
+
+def test_streaming_buckets_within_budget():
+    """Streaming chunks bucket their selections (exact-size, no group
+    padding) and stay inside the residency budget."""
+    data = mixed_payload(4096)
+    a = enc.encode(data, block_size=4096)
+    s = CompressedResidentStore(a)
+    budget = 4 * 4096
+    st = StreamingExecutor(s, max_resident_bytes=budget)
+    payload = np.concatenate(list(st.chunks([ByteRange(0, len(data))])))
+    assert bytes(payload) == data
+    for c in st.chunk_log:
+        assert c.resident_bytes <= budget
+    # a tail-only (shallow) stream never pays the deep bound
+    st2 = StreamingExecutor(s, max_resident_bytes=budget)
+    shallow = np.flatnonzero(s.decoder.block_rounds < a.max_depth)
+    lo = int(shallow[0]) * 4096
+    hi = min(len(data), (int(shallow[-1]) + 1) * 4096)
+    got = np.concatenate(list(st2.chunks([ByteRange(lo, hi)])))
+    assert bytes(got) == data[lo:hi]
+    assert max(s.decoder.launch_rounds_last) < a.max_depth

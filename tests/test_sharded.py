@@ -43,6 +43,64 @@ def test_sharded_decode_bit_perfect():
     assert "OK" in out
 
 
+def test_sharded_depth_bucketed_bit_identical():
+    """Regression: ShardedExecutor used to run every shard at the
+    archive-wide depth bound via `dec._meta`'s default. It now routes the
+    plan's per-bucket schedule — a shallow selection runs strictly fewer
+    rounds per launch, and mixed selections stay bit-identical to the
+    unbucketed fan-out."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.api.executors import ShardedExecutor
+        from repro.api.plan import QueryPlanner
+        from repro.core import encoder
+        from repro.core.residency import CompressedResidentStore
+        from repro.core.sharded_decode import replicate_archive
+        from repro.compat import make_mesh
+        # deep-chain head (repeated literal segment -> depth > 1 chains)
+        # + incompressible tail (depth 0): a mixed-depth archive
+        rng = np.random.default_rng(1)
+        body = rng.integers(0, 256, 1024, dtype=np.uint8)
+        parts = [body]
+        while sum(p.size for p in parts) < 80_000:
+            parts += [rng.integers(0, 256, 16, dtype=np.uint8), body]
+        head = np.concatenate(parts)[:80_000]
+        rng2 = np.random.default_rng(3)
+        tail = rng2.integers(0, 256, 80_000, dtype=np.uint8)
+        data = np.concatenate([head, tail]).tobytes()
+        a = encoder.encode(data, block_size=4096)
+        s = CompressedResidentStore(a, backend="ref")
+        dec = s.decoder
+        assert dec.multi_bucket
+        mesh = make_mesh((8,), ("data",))
+        replicate_archive(dec, mesh)
+        planner = QueryPlanner(s)
+        sx = ShardedExecutor(s, mesh)
+        # whole archive, mixed depth: one sharded launch per bucket
+        plan = planner.plan_spans(np.array([0]), np.array([len(data)]))
+        rows, lens = sx.run(plan)
+        assert bytes(np.asarray(rows[0, :len(data)])) == data
+        assert sorted(dec.launch_rounds_last) == sorted(
+            int(v) for v in np.unique(dec.block_rounds))
+        # shallow selection: strictly fewer rounds than the archive bound
+        shallow = np.flatnonzero(dec.block_rounds < a.max_depth)
+        lo = int(shallow[0]) * 4096 + 5
+        plan2 = planner.plan_spans(np.array([lo]), np.array([6000]))
+        rows2, _ = sx.run(plan2)
+        assert bytes(np.asarray(rows2[0, :6000])) == data[lo:lo + 6000]
+        assert max(dec.launch_rounds_last) < a.max_depth
+        # unbucketed reference fan-out is bit-identical
+        dec.launch_rounds_last = []
+        dec._block_rounds = None
+        rows3, _ = sx.run(planner.plan_spans(np.array([0]),
+                                             np.array([len(data)])))
+        assert bytes(np.asarray(rows3[0, :len(data)])) == data
+        assert dec.launch_rounds_last == [a.max_depth]
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_manual_dp_step_with_compression():
     out = _run("""
