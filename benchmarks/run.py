@@ -51,6 +51,8 @@ _TABLES = [
      "serving: batched variable-length random access"),
     ("cache", "benchmarks.bench_cache",
      "serving: device-resident block cache (Zipfian working set)"),
+    ("serving", "benchmarks.bench_serving",
+     "serving: multi-tenant frontend (closed-loop latency/admission)"),
     ("query", "benchmarks.bench_query",
      "api: unified query plane (plan lowering + region latency)"),
     ("scale", "benchmarks.bench_scale", "§5: range decode / memory budget"),

@@ -78,6 +78,24 @@ def depth_tag(name: str, derived: str) -> str:
     return f" [{';'.join(tags)}]" if tags else ""
 
 
+def serve_tag(name: str, derived: str) -> str:
+    """`serve/*` rows carry the closed-loop SLO outcomes (deadline-miss
+    rate, per-tenant cache hit rate, backpressure counts, duel ratios) in
+    their derived field; surface them next to the timing so an admission
+    or scheduling regression shows up as the SLO it breaks (miss rate up,
+    hit rate down, hi-tenant p95 multiple up), not just as microseconds."""
+    if not name.startswith("serve/"):
+        return ""
+    tags = [part for part in derived.split(";")
+            if part.startswith(("miss=", "hit=", "hit_delta=", "shed=",
+                                "rejected=", "x_unloaded=", "p99_ratio="))]
+    return f" [{';'.join(tags)}]" if tags else ""
+
+
+def row_tag(name: str, derived: str) -> str:
+    return depth_tag(name, derived) or serve_tag(name, derived)
+
+
 def merge(out_path: str, in_paths: list) -> int:
     """Per-row best-of-runs baseline: min us_per_call across snapshots,
     plus the observed relative spread (max-min)/min that widens the gate
@@ -223,7 +241,7 @@ def main() -> int:
         delta = (c - b) / b
         line = (f"{name}: {b:.1f}us -> {c:.1f}us ({delta:+.1%}, "
                 f"allowed +{allowed:.0%})"
-                + depth_tag(name, cur_derived.get(name, "")))
+                + row_tag(name, cur_derived.get(name, "")))
         if b < args.min_us:
             informational.append(line)
         elif delta > allowed:
@@ -232,12 +250,16 @@ def main() -> int:
             improved.append(line)
     new = sorted(set(cur) - set(base))
 
-    # recorded resolve depth per ra/* row (debuggability: a depth change
-    # explains a time change before anyone bisects the resolver)
+    # recorded resolve depth per ra/* row and SLO outcomes per serve/*
+    # row (debuggability: a depth or miss-rate change explains a time
+    # change before anyone bisects the resolver or the scheduler)
     for name in sorted(cur):
         tag = depth_tag(name, cur_derived.get(name, ""))
         if tag:
             print(f"  depth    {name}: {cur[name]:.1f}us{tag}")
+        tag = serve_tag(name, cur_derived.get(name, ""))
+        if tag:
+            print(f"  serve    {name}: {cur[name]:.1f}us{tag}")
     for line in informational:
         print(f"  jitter   {line}")
     for line in improved:
@@ -245,7 +267,7 @@ def main() -> int:
     for name in new:
         print(f"  NEW      {name}: {cur[name]:.1f}us (not gated; refresh "
               f"the baseline with --merge/--update to gate it)"
-              + depth_tag(name, cur_derived.get(name, "")))
+              + row_tag(name, cur_derived.get(name, "")))
     if regressions:
         print(f"\nbench_compare: {len(regressions)} regression(s):")
         for line in regressions:

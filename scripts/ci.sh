@@ -42,18 +42,25 @@ if [ "$TESTS" = 1 ]; then
 fi
 
 if [ "$BENCH" = 1 ]; then
+  # serving-plane smoke: one closed loop through ServingFrontend with a
+  # bit-identity spot check on every request (asserts 0 deadline misses)
+  python -m repro.serving.traffic --smoke
   # bench smoke: index/fetch/query planes, the block-size sweep (the
   # regime that exposed the u16 offset truncation), the block cache,
-  # random access incl. the checkpointed-wavefront seek, and a --small
-  # autotuner sweep (tune/sweep, tune/frontier_points). The
-  # random_access table exercises BOTH resolver paths every run: the
-  # depth-bounded decode of a fresh ACEJAX04 archive (ra/full_decode,
-  # ra/decode_GBps — asserted bit-identical) and the legacy depth-free
-  # early-exit decode (ra/legacy_early_exit), plus the depth-bucketed
-  # schedule (ra/depth_bucketed_GBps); bench_compare prints each ra/*
-  # row's recorded max_depth and bucket histogram next to its time.
+  # random access incl. the checkpointed-wavefront seek, a --small
+  # autotuner sweep (tune/sweep, tune/frontier_points), and the
+  # multi-tenant serving plane (serve/* rows: closed-loop percentiles,
+  # the TinyLFU-vs-admit_after drift duel, flash-crowd backpressure —
+  # bench_compare prints deadline-miss and per-tenant hit rates next to
+  # each serve/* row). The random_access table exercises BOTH resolver
+  # paths every run: the depth-bounded decode of a fresh ACEJAX04
+  # archive (ra/full_decode, ra/decode_GBps — asserted bit-identical)
+  # and the legacy depth-free early-exit decode (ra/legacy_early_exit),
+  # plus the depth-bucketed schedule (ra/depth_bucketed_GBps);
+  # bench_compare prints each ra/* row's recorded max_depth and bucket
+  # histogram next to its time.
   python -m benchmarks.run --small \
-    --only index,fetch_batch,query,blocksize,cache,random_access,tune \
+    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving \
     --json bench_current.json
   python scripts/bench_compare.py BENCH_baseline.json bench_current.json
 fi

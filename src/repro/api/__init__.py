@@ -13,7 +13,8 @@ from repro.api.address import (Address, ByteRange, NameTable, ReadId, Region,
                                normalize, parse_region)
 from repro.api.archive import GenomicArchive
 from repro.api.cache import (BlockCache, EvictionPolicy, FrequencyPolicy,
-                             LRUPolicy, PinRangePolicy)
+                             FrequencySketch, LRUPolicy, PinRangePolicy,
+                             TinyLFUPolicy)
 from repro.api.executors import (ChunkStats, DeviceExecutor, ShardedExecutor,
                                  StreamingExecutor)
 from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
@@ -23,8 +24,9 @@ from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
 __all__ = [
     "Address", "BlockCache", "ByteRange", "CachePlan", "ChunkStats",
     "DecodePlan", "DeviceExecutor", "EvictionPolicy", "FrequencyPolicy",
-    "GenomicArchive", "LRUPolicy", "NameTable", "PinRangePolicy",
-    "QueryPlanner", "ReadId", "Region", "ShardedExecutor",
-    "StreamingExecutor", "anchor_floor", "anchor_window_groups",
-    "covering_blocks", "normalize", "parse_region",
+    "FrequencySketch", "GenomicArchive", "LRUPolicy", "NameTable",
+    "PinRangePolicy", "QueryPlanner", "ReadId", "Region",
+    "ShardedExecutor", "StreamingExecutor", "TinyLFUPolicy",
+    "anchor_floor", "anchor_window_groups", "covering_blocks",
+    "normalize", "parse_region",
 ]

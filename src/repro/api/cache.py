@@ -18,8 +18,13 @@ the device-residency advantage over CPU random-access decompressors
 
 Eviction/admission is pluggable: `LRUPolicy` (recency), `FrequencyPolicy`
 (frequency-aware admission — Zipfian serving working sets should not let
-one-hit wonders evict hot blocks), and `PinRangePolicy` (hot prefixes
-stay resident unconditionally).
+one-hit wonders evict hot blocks), `TinyLFUPolicy` (doorkeeper + aged
+4-bit count-min sketch: admission by sketch-frequency-vs-victim
+comparison, with periodic halving so a hot-set shift wins slots instead
+of being vetoed by stale counts), and `PinRangePolicy` (hot prefixes
+stay resident unconditionally). The multi-tenant serving plane
+(`repro.serving.admission.TenantPartitionPolicy`) wraps any of them with
+per-tenant slot floors + a shared spill pool.
 
 Checkpointed-wavefront ("global" + anchors) archives compose here too:
 slots stay keyed by block id — decoded block bytes are identical
@@ -124,6 +129,145 @@ class FrequencyPolicy(LRUPolicy):
         self._freq[blocks] += 1
 
 
+class FrequencySketch:
+    """4-bit count-min sketch over block ids — the TinyLFU frequency
+    table. `n_hash` rows of a pow2 `width` hold saturating 0..15
+    counters; `halve()` ages every counter (>> 1), so stale popularity
+    decays geometrically instead of accumulating forever (the failure
+    mode of a monotone count like `FrequencyPolicy._freq`: yesterday's
+    hot head outvotes today's flash crowd indefinitely). All adds and
+    estimates are vectorized over the key batch."""
+
+    _MIX = np.array([0x9E3779B97F4A7C15, 0xC2B2AE3D27D4EB4F,
+                     0x165667B19E3779F9, 0xD6E8FEB86659FD93], np.uint64)
+
+    def __init__(self, n_keys: int, n_hash: int = 4):
+        if n_keys <= 0:
+            raise ValueError(f"n_keys must be positive, got {n_keys}")
+        self.width = 1 << max(4, int(n_keys - 1).bit_length())
+        self.n_hash = min(max(1, int(n_hash)), len(self._MIX))
+        self.table = np.zeros((self.n_hash, self.width), np.uint8)
+        self.halvings = 0
+
+    def _slots(self, keys: np.ndarray) -> np.ndarray:
+        k = np.asarray(keys, np.uint64)[None, :]
+        with np.errstate(over="ignore"):
+            h = k * self._MIX[:self.n_hash, None]
+            h ^= h >> np.uint64(31)
+            h *= np.uint64(0xFF51AFD7ED558CCD)
+            h ^= h >> np.uint64(33)
+        return (h & np.uint64(self.width - 1)).astype(np.int64)
+
+    def add(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if keys.size == 0:
+            return
+        idx = self._slots(keys)
+        for r in range(self.n_hash):
+            bump = np.bincount(idx[r], minlength=self.width)
+            row = self.table[r] + np.minimum(bump, 15)
+            self.table[r] = np.minimum(row, 15).astype(np.uint8)
+
+    def estimate(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if keys.size == 0:
+            return np.zeros(0, np.int64)
+        idx = self._slots(keys)
+        est = self.table[0][idx[0]].astype(np.int64)
+        for r in range(1, self.n_hash):
+            np.minimum(est, self.table[r][idx[r]], out=est)
+        return est
+
+    def halve(self) -> None:
+        self.table >>= 1
+        self.halvings += 1
+
+
+class TinyLFUPolicy(LRUPolicy):
+    """TinyLFU admission (doorkeeper + aged 4-bit sketch) with
+    lowest-estimated-frequency eviction, LRU recency as the tie-break.
+
+    Every sighting of a block — miss, hit, or install — feeds the
+    filter: the first sighting sets the block's doorkeeper bit (one-hit
+    wonders live and die there, never polluting the sketch), repeat
+    sightings bump the count-min sketch. Every `sample_factor *
+    capacity` sightings the sketch HALVES and the doorkeeper clears —
+    the aging step the static `FrequencyPolicy.admit_after` lacks, so a
+    formerly-hot working set decays into evictability instead of
+    squatting on slots while a flash crowd is turned away. A missed
+    block is admitted when free slots remain, or when its estimated
+    frequency strictly beats the weakest resident block's (the victim
+    it would displace) — the sketch-vs-victim comparison that lets a
+    sustained hot-key shift win slots within a few sightings."""
+
+    name = "tinylfu"
+
+    def __init__(self, n_hash: int = 4, sample_factor: int = 8):
+        if sample_factor <= 0:
+            raise ValueError(
+                f"sample_factor must be positive, got {sample_factor}")
+        self.n_hash = int(n_hash)
+        self.sample_factor = int(sample_factor)
+
+    def bind(self, cache: "BlockCache") -> None:
+        super().bind(cache)
+        self.sketch = FrequencySketch(cache.n_blocks, self.n_hash)
+        self.door = np.zeros(cache.n_blocks, bool)
+        self.window = max(1, self.sample_factor * cache.capacity)
+        self._ops = 0
+
+    # ----------------------------------------------------------- filter
+    def record(self, blocks: np.ndarray) -> None:
+        """Count a batch of sightings: doorkeeper first, then sketch;
+        halve + clear once the sample window fills."""
+        blocks = np.asarray(blocks, np.int64).reshape(-1)
+        if blocks.size == 0:
+            return
+        fresh = ~self.door[blocks]
+        self.door[blocks[fresh]] = True
+        seen = blocks[~fresh]
+        if seen.size:
+            self.sketch.add(seen)
+        self._ops += int(blocks.size)
+        if self._ops >= self.window:
+            self.sketch.halve()
+            self.door[:] = False
+            self._ops = 0
+
+    def estimate(self, blocks: np.ndarray) -> np.ndarray:
+        blocks = np.asarray(blocks, np.int64).reshape(-1)
+        return self.sketch.estimate(blocks) + self.door[blocks]
+
+    # ----------------------------------------------------- policy hooks
+    def admit(self, miss_blocks: np.ndarray) -> np.ndarray:
+        self.record(miss_blocks)
+        resident = self.cache.slot_block[self.cache.slot_block >= 0]
+        if resident.size == 0:
+            return np.ones(miss_blocks.size, bool)
+        est = self.estimate(miss_blocks)
+        victim = int(self.estimate(resident).min())
+        mask = est > victim
+        # free slots cost nobody anything: top the admitted set up to the
+        # free-slot count (plan() hands free slots to admitted misses
+        # first, so the topped-up extras never trigger an eviction)
+        extra = (self.cache.capacity - resident.size) - int(mask.sum())
+        if extra > 0:
+            mask[np.flatnonzero(~mask)[:extra]] = True
+        return mask
+
+    def victims(self, k: int, evictable: np.ndarray) -> np.ndarray:
+        cand = np.flatnonzero(evictable)
+        if cand.size == 0:
+            return np.zeros(0, np.int64)
+        est = self.estimate(self.cache.slot_block[cand])
+        order = np.lexsort((self._last[cand], est))
+        return cand[order[:k]]
+
+    def touch(self, slots: np.ndarray, blocks: np.ndarray) -> None:
+        super().touch(slots, blocks)   # LRU recency tick
+        self.record(blocks)            # hits/installs are sightings too
+
+
 class PinRangePolicy(EvictionPolicy):
     """Pin the block range [lo, hi): pinned blocks are always admitted and
     never evicted (hot-prefix residency — headers, dictionaries, the first
@@ -157,7 +301,8 @@ class PinRangePolicy(EvictionPolicy):
         self.inner.touch(slots, blocks)
 
 
-_POLICIES = {"lru": LRUPolicy, "freq": FrequencyPolicy}
+_POLICIES = {"lru": LRUPolicy, "freq": FrequencyPolicy,
+             "tinylfu": TinyLFUPolicy}
 
 
 def make_policy(policy: Union[str, EvictionPolicy]) -> EvictionPolicy:

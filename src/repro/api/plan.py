@@ -166,6 +166,13 @@ class DecodePlan:
             self._cover = (b0, r0, end_blk, uniq, row_map)
         return self._cover
 
+    def n_cover_blocks(self) -> int:
+        """Unique covering blocks of this plan — the decode-work unit the
+        serving frontend's service-time estimator prices dispatches in
+        (a batch costs roughly fixed launch overhead + per-block decode,
+        and hits/misses split from exactly this set at the cache step)."""
+        return int(self.host_cover()[3].size)
+
     def anchor_windows(self, anchors: np.ndarray) -> list:
         """This plan's covering set grouped by governing anchor window:
         [(win_first, win_last, idx-into-uniq)]. The total decode work of a

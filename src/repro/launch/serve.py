@@ -20,7 +20,10 @@ from repro.api import GenomicArchive
 from repro.configs import get_config
 from repro.data.fastq import make_fastq
 from repro.models.registry import build_model
+from repro.serving.frontend import ServingFrontend
 from repro.serving.serve_step import ReadBatcher, ServeConfig, ServeSession
+from repro.serving.traffic import (TenantLoad, ZipfianSampler,
+                                   format_report, run_closed_loop)
 
 
 def main():
@@ -31,16 +34,26 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-blocks", type=int, default=64,
                     help="decoded-block cache capacity (0 disables)")
-    ap.add_argument("--cache-policy", default="lru",
-                    choices=("lru", "freq"),
+    ap.add_argument("--cache-policy", default="tinylfu",
+                    choices=("lru", "freq", "tinylfu"),
                     help="block cache eviction/admission policy")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="tenants registered on the serving frontend")
+    ap.add_argument("--deadline-us", type=float, default=2_000_000.0,
+                    help="per-request deadline the frontend holds "
+                         "requests to (closed-loop demo)")
     ap.add_argument("--tune-target", default="seek",
                     choices=("seek", "ratio", "throughput"),
                     help="autotuner objective for the encode profile "
                          "(serving is seek-bound, so 'seek' by default)")
     ap.add_argument("--tune-sample-kb", type=int, default=256,
                     help="corpus sample the tuner sweeps, in KiB")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced actually reaches the
+    # full-size config (the old action="store_true", default=True made
+    # the flag a no-op and full configs unreachable from the CLI)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced model config (--no-reduced = full size)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -75,8 +88,23 @@ def main():
           f"{batcher.flushes} fetch(es) of {batcher.unique_fetched} unique "
           f"rows: {t_fetch*1e3:.1f} ms "
           f"({len(tickets)/t_fetch:.0f} reads/s) "
-          f"cache={ga.store.cache_info()}")
+          f"last_flush={batcher.stats()['last_flush_us']:.0f}us "
+          f"cache={batcher.cache_info()}")
     assert all(len(reads[t]) > 0 for t in tickets)
+
+    # ---- multi-tenant frontend: deadlines, priorities, backpressure ----
+    fe = ServingFrontend({"corpus": ga}, max_batch=max(args.requests, 64))
+    loads = []
+    for i in range(args.tenants):
+        name = f"tenant{i}"
+        fe.register_tenant(name, "corpus", priority=min(i, 1))
+        loads.append(TenantLoad(
+            name, ZipfianSampler(ga.n_reads, seed=i), requests=32,
+            concurrency=4, deadline_us=args.deadline_us, priority=None))
+    report = run_closed_loop(fe, loads, verify_sample=4)
+    print(f"frontend closed loop ({args.tenants} tenants, deadline "
+          f"{args.deadline_us:.0f}us):")
+    print(format_report(report))
 
     # ---- named region through the device-resident name table ----
     region = f"SRR0.{int(ids[0])}:1-40"

@@ -1,0 +1,42 @@
+"""The serving plane: batched endpoints + the multi-tenant frontend.
+
+`ReadBatcher`/`ServeSession` (`serve_step`) are the single-tenant batch
+endpoints over the query plane; `ServingFrontend` (`frontend`) is the
+multi-tenant serving plane on top — continuous batching across N
+archives, deadline/priority scheduling with typed `Overloaded`
+backpressure, per-tenant cache partitions + TinyLFU admission
+(`admission`), and the closed-loop traffic harness (`traffic`) that
+turns its latency claims into measured p50/p95/p99 numbers.
+
+Exports resolve lazily (PEP 562) so `python -m repro.serving.traffic`
+does not re-import its own module through the package.
+"""
+_EXPORTS = {
+    "ServiceEstimator": "repro.serving.admission",
+    "TenantPartitionPolicy": "repro.serving.admission",
+    "Overloaded": "repro.serving.frontend",
+    "Result": "repro.serving.frontend",
+    "ServingFrontend": "repro.serving.frontend",
+    "Ticket": "repro.serving.frontend",
+    "ReadBatcher": "repro.serving.serve_step",
+    "ServeConfig": "repro.serving.serve_step",
+    "ServeSession": "repro.serving.serve_step",
+    "FlashCrowdSampler": "repro.serving.traffic",
+    "MixSampler": "repro.serving.traffic",
+    "ScanSampler": "repro.serving.traffic",
+    "TenantLoad": "repro.serving.traffic",
+    "ZipfianSampler": "repro.serving.traffic",
+    "format_report": "repro.serving.traffic",
+    "run_closed_loop": "repro.serving.traffic",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

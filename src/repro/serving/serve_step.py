@@ -19,6 +19,7 @@ Both endpoints route through the unified query plane (`repro.api`):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -52,7 +53,12 @@ class ReadBatcher:
     """
 
     def __init__(self, store, max_batch: int = 256):
-        self.store = store.store if isinstance(store, GenomicArchive) \
+        # a GenomicArchive is accepted uniformly: fetches and cache
+        # counters both resolve against its underlying store, so callers
+        # never reach through `.store` themselves
+        self.archive: Optional[GenomicArchive] = \
+            store if isinstance(store, GenomicArchive) else None
+        self.store = self.archive.store if self.archive is not None \
             else store
         self.max_batch = int(max_batch)
         self._queue: List[_Pending] = []
@@ -60,6 +66,9 @@ class ReadBatcher:
         self.flushes = 0
         self.served = 0
         self.unique_fetched = 0
+        self.last_flush_us = 0.0       # wall time of the latest flush()
+        self.total_flush_us = 0.0      # — the serving frontend's service-
+                                       # time estimator consumes these
 
     def submit(self, read_id: int) -> int:
         read_id = int(read_id)
@@ -79,10 +88,25 @@ class ReadBatcher:
         """The store's decoded-block cache counters (zeros when off)."""
         return self.store.cache_info()
 
+    def stats(self) -> dict:
+        """Serving counters + per-flush latency instrumentation.
+        `last_flush_us` is the wall time of the most recent `flush()`
+        (every fetch in it, end to end); `avg_flush_us` amortizes over
+        all flushes so far. The multi-tenant frontend's service-time
+        estimator reads these to price deadline feasibility."""
+        return {"flushes": self.flushes, "served": self.served,
+                "unique_fetched": self.unique_fetched,
+                "pending": len(self._queue),
+                "last_flush_us": self.last_flush_us,
+                "avg_flush_us": (self.total_flush_us / self.flushes
+                                 if self.flushes else 0.0)}
+
     def flush(self, mode2: bool = True) -> Dict[int, np.ndarray]:
         """→ {ticket: read bytes (u8, exact length)} for all queued
         requests."""
         out: Dict[int, np.ndarray] = {}
+        t0 = time.perf_counter()
+        flushed = False
         while self._queue:
             # dedup across the WHOLE queue, then decode up to max_batch
             # unique rows per fetch — duplicates never cost a second row
@@ -105,6 +129,10 @@ class ReadBatcher:
             self._queue = remaining
             self.flushes += 1
             self.unique_fetched += int(uniq.size)
+            flushed = True
+        if flushed:
+            self.last_flush_us = (time.perf_counter() - t0) * 1e6
+            self.total_flush_us += self.last_flush_us
         return out
 
 

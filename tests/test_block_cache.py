@@ -3,8 +3,10 @@ one-launch miss decode, and the entry points that ride it."""
 import numpy as np
 import pytest
 
-from repro.api.cache import (BlockCache, FrequencyPolicy, LRUPolicy,
-                             PinRangePolicy, make_policy)
+from repro.api.cache import (BlockCache, FrequencyPolicy, FrequencySketch,
+                             LRUPolicy, PinRangePolicy, TinyLFUPolicy,
+                             make_policy)
+from repro.serving.admission import TenantPartitionPolicy
 from repro.api.plan import CachePlan, split_cache_hits
 from repro.core import encoder as enc
 from repro.core.index import ReadIndex
@@ -105,8 +107,101 @@ def test_make_policy_rejects_unknown():
     with pytest.raises(ValueError, match="unknown cache policy"):
         make_policy("mru")
     assert isinstance(make_policy("freq"), FrequencyPolicy)
+    assert isinstance(make_policy("tinylfu"), TinyLFUPolicy)
     p = LRUPolicy()
     assert make_policy(p) is p
+
+
+# ------------------------------------------------------- TinyLFU admission
+def test_frequency_sketch_saturates_and_halves():
+    sk = FrequencySketch(64, n_hash=4)
+    sk.add(np.full(40, 7))
+    assert int(sk.estimate(np.array([7]))[0]) == 15   # 4-bit saturation
+    assert int(sk.estimate(np.array([9]))[0]) == 0    # no cross-talk
+    sk.add(np.array([9, 9, 9]))
+    sk.halve()
+    assert sk.halvings == 1
+    assert int(sk.estimate(np.array([7]))[0]) == 7    # 15 >> 1
+    assert int(sk.estimate(np.array([9]))[0]) == 1
+    with pytest.raises(ValueError, match="positive"):
+        FrequencySketch(0)
+    with pytest.raises(ValueError, match="positive"):
+        TinyLFUPolicy(sample_factor=0)
+
+
+def test_tinylfu_aging_decays_stale_head(corpus):
+    """The aging step FrequencyPolicy lacks: a formerly-hot head squats
+    while its sketch counts are fresh, but halvings decay it to
+    evictability and the flash-crowd key then wins a slot in ONE
+    sighting."""
+    a, _, _ = corpus
+    pol = TinyLFUPolicy(sample_factor=64)     # window too big to self-age
+    cache = BlockCache(2, BS, a.n_blocks, policy=pol)
+    for _ in range(5):
+        cache.plan(np.array([0, 1]))          # hot head: est >> 1
+    assert int(pol.estimate(np.array([0, 1])).min()) >= 2
+    # a twice-seen newcomer loses the sketch-vs-victim vote to the head
+    cache.plan(np.array([4]))
+    cache.plan(np.array([4]))
+    assert cache.slot_of[4] < 0
+    # age: four sample windows of unrelated traffic halve the sketch to
+    # zero and clear the doorkeeper — the head's history expires
+    for _ in range(4):
+        pol.record(np.full(pol.window, 2))
+    assert pol.sketch.halvings >= 4
+    assert int(pol.estimate(np.array([0, 1])).max()) == 0
+    cache.plan(np.array([4]))                 # one sighting now suffices
+    assert cache.slot_of[4] >= 0
+    assert cache.slot_of[0] < 0 or cache.slot_of[1] < 0
+
+
+def test_tinylfu_flash_crowd_admitted_within_k_sightings(corpus):
+    """A sustained hot-key shift earns residency within a bounded number
+    of sightings (doorkeeper + sketch accumulation + window aging), with
+    no manual intervention."""
+    a, _, _ = corpus
+    pol = TinyLFUPolicy(sample_factor=2)      # window = 4 sightings
+    cache = BlockCache(2, BS, a.n_blocks, policy=pol)
+    for _ in range(6):
+        cache.plan(np.array([0, 1]))          # yesterday's head
+    admitted_at = None
+    for k in range(1, 17):
+        cache.plan(np.array([4]))             # the crowd keeps coming
+        if cache.slot_of[4] >= 0:
+            admitted_at = k
+            break
+    assert admitted_at is not None, "flash-crowd key never admitted"
+    assert admitted_at <= 8, f"took {admitted_at} sightings"
+
+
+def test_tenant_partition_floors_hold_under_adversarial_thrash(corpus):
+    """Policy-level floor guarantee: tenant b cycling the whole corpus
+    through the cache can never evict tenant a's floor-protected slots;
+    b's churn stays confined to its own floor + the spill pool."""
+    a, _, _ = corpus
+    pol = TenantPartitionPolicy({"a": 2, "b": 1}, inner="lru")
+    cache = BlockCache(4, BS, a.n_blocks, policy=pol)
+    pol.set_tenant("a")
+    cache.plan(np.array([0, 1]))              # a's protected working set
+    pol.set_tenant("b")
+    for blk in range(2, min(24, a.n_blocks)):
+        cache.plan(np.array([blk]))           # adversarial full-corpus scan
+    assert cache.slot_of[0] >= 0 and cache.slot_of[1] >= 0, \
+        "tenant a was thrashed below its floor"
+    counts = pol.resident_counts()
+    assert counts["a"] == 2
+    assert counts["b"] <= 2                   # own floor + spill only
+    # a's blocks are still exact hits, not re-decodes
+    assert cache.plan(np.array([0, 1])).n_hits == 2
+
+
+def test_tenant_partition_rejects_overcommitted_floors(corpus):
+    a, _, _ = corpus
+    with pytest.raises(ValueError, match="floors sum"):
+        BlockCache(2, BS, a.n_blocks,
+                   policy=TenantPartitionPolicy({"a": 2, "b": 1}))
+    with pytest.raises(ValueError, match="negative floor"):
+        TenantPartitionPolicy({"a": -1})
 
 
 # ------------------------------------------------- one-launch miss decode
@@ -140,8 +235,11 @@ def test_cached_zipfian_serving_bit_perfect_all_policies(corpus):
     rng = np.random.default_rng(11)
     batches = [_zipf_ids(rng, idx.n_reads, 48) for _ in range(4)]
     wants = [np.asarray(plain.fetch_reads(b)[0]) for b in batches]
+    tenant_pol = TenantPartitionPolicy({"t": 2})
+    tenant_pol.set_tenant("t")
     for cap in (3, 16, a.n_blocks):
-        for policy in ("lru", "freq", PinRangePolicy(0, 2)):
+        for policy in ("lru", "freq", "tinylfu", PinRangePolicy(0, 2),
+                       tenant_pol):
             s = _store(corpus, cache_blocks=cap, cache_policy=policy)
             for b, want in zip(batches, wants):
                 got = np.asarray(s.fetch_reads(b)[0])
