@@ -1,0 +1,116 @@
+"""Mesh-sharded archives: decode throughput and bytes-resident-per-shard
+vs mesh width (report-only shard/* rows).
+
+Multi-device numbers need forced host devices, and the device-count flag
+cannot be set in-process — so the measurements run in ONE subprocess
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) that prints
+parseable `ROW name seconds derived` lines, re-emitted here through
+`common.row` so they land in the snapshot like every other table.
+
+    shard/decode_partitioned/wN — full-archive decode, blocks partitioned
+        over N shards; derived carries per_shard=/total= resident bytes
+        (the tentpole claim: per-shard compressed residency ~ total/N)
+    shard/decode_replicated/w8  — the replicated-work fast path at width 8
+        (per_shard == total: every device holds the whole archive)
+    shard/cached_reread/w8      — repeated Zipfian selection through
+        ShardedExecutor's per-shard block cache; derived carries hit=
+"""
+import os
+import subprocess
+import sys
+
+from benchmarks.common import row
+
+_CHILD = r"""
+import sys, time
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.data.fastq import make_fastq
+from repro.core import encoder
+from repro.core.residency import CompressedResidentStore
+from repro.core.sharded_decode import (partition_archive,
+                                       partitioned_decode_blocks,
+                                       sharded_decode_blocks,
+                                       replicate_archive)
+
+small = sys.argv[1] == "1"
+data = make_fastq("platinum", n_reads=1500 if small else 6000, seed=1)
+a = encoder.encode(data, block_size=4096)
+s = CompressedResidentStore(a, backend="auto")
+dec = s.decoder
+total = sum(np.asarray(v).nbytes for v in dec.arrays.values())
+sel = np.arange(a.n_blocks)
+reps = 3 if small else 5
+
+
+def best(fn):
+    b = float("inf")
+    for i in range(reps + 1):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        if i:                                   # first pass compiles
+            b = min(b, time.perf_counter() - t0)
+    return b
+
+
+for w in (2, 4, 8):
+    if a.n_blocks < w:
+        continue
+    mesh = Mesh(np.array(jax.devices()[:w]), ("data",))
+    part = partition_archive(dec, mesh)
+    t = best(lambda: partitioned_decode_blocks(dec, part, sel))
+    gbs = len(data) / t / 1e9
+    print(f"ROW shard/decode_partitioned/w{w} {t:.6f} "
+          f"GB_s={gbs:.3f};per_shard={part.per_shard_device_bytes};"
+          f"total={total};shards={w}", flush=True)
+
+mesh8 = Mesh(np.array(jax.devices()[:8]), ("data",))
+replicate_archive(dec, mesh8)
+t = best(lambda: sharded_decode_blocks(dec, sel, mesh8))
+print(f"ROW shard/decode_replicated/w8 {t:.6f} "
+      f"GB_s={len(data) / t / 1e9:.3f};per_shard={total};total={total};"
+      f"shards=8", flush=True)
+
+# cached Zipfian re-read through the per-shard block cache
+from repro.api.executors import ShardedExecutor
+from repro.api.plan import QueryPlanner
+s2 = CompressedResidentStore(a, backend="auto")
+sx = ShardedExecutor(s2, mesh8, cache_blocks=max(4, a.n_blocks // 4))
+planner = QueryPlanner(s2)
+rng = np.random.default_rng(0)
+bs = a.block_size
+zipf = np.minimum(rng.zipf(1.3, size=64), a.n_blocks - 1)
+spans = np.minimum(np.full(zipf.size, bs), len(data) - zipf * bs)
+plan = planner.plan_spans(zipf * bs, spans)
+sx.run(plan)[0].block_until_ready()             # cold pass installs
+b = float("inf")
+for i in range(reps):
+    t0 = time.perf_counter()
+    sx.run(plan)[0].block_until_ready()
+    b = min(b, time.perf_counter() - t0)
+ci = sx.cache_info()
+hit = ci["hits"] / max(1, ci["hits"] + ci["misses"])
+print(f"ROW shard/cached_reread/w8 {b:.6f} "
+      f"hit={hit:.2f};per_shard={s2.sharded.per_shard_bytes()};shards=8",
+      flush=True)
+"""
+
+
+def main(small: bool = False) -> None:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.path.join(os.path.dirname(__file__), "..")]))
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD, "1" if small else "0"],
+        capture_output=True, text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded bench child failed:\n"
+                           f"{out.stderr[-4000:]}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        _, name, secs, derived = line.split(" ", 3)
+        row(name, float(secs), derived)

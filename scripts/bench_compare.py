@@ -92,8 +92,23 @@ def serve_tag(name: str, derived: str) -> str:
     return f" [{';'.join(tags)}]" if tags else ""
 
 
+def shard_tag(name: str, derived: str) -> str:
+    """`shard/*` rows carry the mesh-residency accounting (per-shard
+    resident bytes, mesh width, cached-re-read hit rate) in their derived
+    field; surface it next to the timing so a residency regression (a
+    shard quietly holding more than its slice) is visible in the gate
+    output, not just the microseconds it costs."""
+    if not name.startswith("shard/"):
+        return ""
+    tags = [part for part in derived.split(";")
+            if part.startswith(("per_shard=", "shards=", "hit=",
+                                "total="))]
+    return f" [{';'.join(tags)}]" if tags else ""
+
+
 def row_tag(name: str, derived: str) -> str:
-    return depth_tag(name, derived) or serve_tag(name, derived)
+    return (depth_tag(name, derived) or serve_tag(name, derived)
+            or shard_tag(name, derived))
 
 
 def merge(out_path: str, in_paths: list) -> int:
@@ -260,6 +275,9 @@ def main() -> int:
         tag = serve_tag(name, cur_derived.get(name, ""))
         if tag:
             print(f"  serve    {name}: {cur[name]:.1f}us{tag}")
+        tag = shard_tag(name, cur_derived.get(name, ""))
+        if tag:
+            print(f"  shard    {name}: {cur[name]:.1f}us{tag}")
     for line in informational:
         print(f"  jitter   {line}")
     for line in improved:

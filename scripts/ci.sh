@@ -45,6 +45,38 @@ if [ "$BENCH" = 1 ]; then
   # serving-plane smoke: one closed loop through ServingFrontend with a
   # bit-identity spot check on every request (asserts 0 deadline misses)
   python -m repro.serving.traffic --smoke
+  # sharded smoke: mesh-partitioned residency on 8 forced host devices —
+  # partitioned decode bit-identical to the raw corpus, then a cached
+  # re-read through the per-shard block cache must report hits (the flag
+  # is scoped to this one subprocess; setting it in-process is forbidden)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 python - <<'EOF'
+import numpy as np, jax
+from repro.data.fastq import make_fastq
+from repro.core import encoder
+from repro.core.residency import CompressedResidentStore
+from repro.core.sharded_decode import (partition_archive,
+                                       partitioned_decode_blocks)
+from repro.api.executors import ShardedExecutor
+from repro.api.plan import QueryPlanner
+from repro.compat import make_mesh
+data = make_fastq("platinum", n_reads=400, seed=3)
+a = encoder.encode(data, block_size=4096)
+s = CompressedResidentStore(a, backend="auto")
+mesh = make_mesh((8,), ("data",))
+part = partition_archive(s.decoder, mesh)
+rows = np.asarray(partitioned_decode_blocks(s.decoder, part,
+                                            np.arange(a.n_blocks)))
+assert rows.reshape(-1)[:len(data)].tobytes() == data, "partition mismatch"
+assert part.per_shard_device_bytes * 8 < 2 * sum(
+    np.asarray(v).nbytes for v in s.decoder.arrays.values()) + 8 * 4096
+sx = ShardedExecutor(s, mesh, cache_blocks=8)
+plan = QueryPlanner(s).plan_spans(np.array([0]),
+                                  np.array([min(len(data), 32768)]))
+sx.run(plan); sx.run(plan)
+assert sx.cache_info()["hits"] > 0, "sharded cache reported no hits"
+print("sharded smoke OK:", sx.cache_info()["hits"], "hits,",
+      part.per_shard_device_bytes, "B/shard")
+EOF
   # bench smoke: index/fetch/query planes, the block-size sweep (the
   # regime that exposed the u16 offset truncation), the block cache,
   # random access incl. the checkpointed-wavefront seek, a --small
@@ -59,8 +91,10 @@ if [ "$BENCH" = 1 ]; then
   # plus the depth-bucketed schedule (ra/depth_bucketed_GBps);
   # bench_compare prints each ra/* row's recorded max_depth and bucket
   # histogram next to its time.
+  # (sharded joins the smoke set report-only: shard/* rows carry the
+  # per-shard resident bytes bench_compare prints next to each row)
   python -m benchmarks.run --small \
-    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving \
+    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving,sharded \
     --json bench_current.json
   python scripts/bench_compare.py BENCH_baseline.json bench_current.json
 fi

@@ -358,7 +358,8 @@ class BlockCache:
 
     def __init__(self, capacity: int, block_size: int, n_blocks: int,
                  policy: Union[str, EvictionPolicy] = "lru",
-                 block_rounds: Optional[np.ndarray] = None):
+                 block_rounds: Optional[np.ndarray] = None,
+                 device_buffer: bool = True):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.capacity = int(capacity)
@@ -366,7 +367,13 @@ class BlockCache:
         self.n_blocks = int(n_blocks)
         self.block_rounds = block_rounds  # i32[n_blocks] scheduled resolve
                                           # rounds (None = legacy archive)
-        self.buf = jnp.zeros((self.capacity, self.block_size), jnp.uint8)
+        # device_buffer=False: host-side planning state only — the
+        # ShardedBlockCache composes N of these (slot maps + policies,
+        # global block ids) over ONE stacked mesh-sharded slot buffer it
+        # owns itself; per-instance buffers would defeat the placement
+        self.device_buffer = bool(device_buffer)
+        self.buf = (jnp.zeros((self.capacity, self.block_size), jnp.uint8)
+                    if self.device_buffer else None)
         self.slot_block = np.full(self.capacity, -1, np.int64)
         self.slot_of = np.full(self.n_blocks, -1, np.int32)
         self.policy = make_policy(policy)
@@ -467,7 +474,9 @@ class BlockCache:
         install error, because `plan` has already registered the miss
         blocks as resident — serving zeros for them later would violate
         bit-perfectness silently."""
-        self.buf = jnp.zeros((self.capacity, self.block_size), jnp.uint8)
+        if self.device_buffer:
+            self.buf = jnp.zeros((self.capacity, self.block_size),
+                                 jnp.uint8)
         self.slot_block.fill(-1)
         self.slot_of.fill(-1)
         self.policy.bind(self)
@@ -479,6 +488,10 @@ class BlockCache:
         single buffer gather; otherwise the miss set decodes in ONE
         pow2-padded launch and one jitted scatter/gather installs the new
         rows in place (buffer donation) while assembling the output."""
+        if not self.device_buffer:
+            raise RuntimeError(
+                "planning-only BlockCache (device_buffer=False) cannot "
+                "realize — the ShardedBlockCache owns the slot buffer")
         U = cp.n_uniq
         if U == 0:
             return jnp.zeros((0, self.block_size), jnp.uint8)
@@ -543,3 +556,215 @@ class BlockCache:
         self.slot_of[blocks[take]] = slots
         self.coinstalls += int(take.size)
         return int(take.size)
+
+
+# -------------------------------------------------------------- sharded cache
+@partial(jax.jit, donate_argnums=(0,))
+def _shard_install_gather(buf, miss_rows, inst_slot, src_shard, src_is_miss,
+                          src_idx):
+    """Sharded twin of `_install_gather`: buf is the stacked (n_shards,
+    capacity, block_size) slot buffer (donated → in-place), miss_rows the
+    stacked (n_shards, M, block_size) collective decode. Installs scatter
+    shard-locally (`inst_slot == capacity` entries drop); the output rows
+    gather collectively — hits from their shard's slots, misses straight
+    from their shard's fresh decode — which is the all-gather of
+    REQUESTED rows only."""
+    n_shards = buf.shape[0]
+    srow = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    buf = buf.at[jnp.broadcast_to(srow, inst_slot.shape),
+                 inst_slot].set(miss_rows, mode="drop")
+    from_buf = buf[src_shard, jnp.where(src_is_miss, 0, src_idx)]
+    from_miss = miss_rows[src_shard, jnp.where(src_is_miss, src_idx, 0)]
+    rows = jnp.where(src_is_miss[:, None], from_miss, from_buf)
+    return buf, rows
+
+
+@jax.jit
+def _shard_gather_slots(buf, src_shard, slots):
+    """All-hit fast path over the stacked slot buffer: one collective
+    row gather, no decode launch at all."""
+    return buf[src_shard, slots]
+
+
+class ShardedBlockCache:
+    """Per-shard decoded-block caching over a mesh-partitioned archive.
+
+    Composition, not reimplementation: each shard gets its own host-side
+    `BlockCache` planning instance (`device_buffer=False` — slot maps,
+    counters and a full `EvictionPolicy`, keyed by GLOBAL block ids so
+    every existing policy incl. `TenantPartitionPolicy`/`TinyLFUPolicy`
+    works unchanged), while the decoded rows live in ONE stacked
+    (n_shards, capacity, block_size) buffer placed with `NamedSharding`
+    over the mesh — shard s's slots are resident on shard s's device.
+
+    A request's unique covering set splits per owning shard; each shard
+    runs its own hit/miss split (its own CachePlan), the combined miss
+    set decodes in one depth-bucketed collective launch per scheduled
+    round group, and a single jitted scatter/gather installs the new
+    rows shard-locally while assembling only the requested rows.
+
+    `policy` is a name or a ZERO-ARG factory (each shard needs its own
+    policy instance — shared mutable state across shards would corrupt
+    the slot maps).
+    """
+
+    def __init__(self, capacity_per_shard: int, block_size: int,
+                 n_blocks: int, part, policy="lru",
+                 block_rounds: Optional[np.ndarray] = None):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        if isinstance(policy, EvictionPolicy):
+            raise TypeError(
+                "ShardedBlockCache needs one policy instance PER shard — "
+                "pass a name ('lru'/'freq'/'tinylfu') or a zero-arg "
+                "factory, not a shared instance")
+        factory = policy if callable(policy) else (
+            lambda: make_policy(policy))
+        self.part = part
+        self.capacity = int(capacity_per_shard)
+        self.block_size = int(block_size)
+        self.n_blocks = int(n_blocks)
+        self.block_rounds = block_rounds
+        self.shards = [
+            BlockCache(self.capacity, self.block_size, self.n_blocks,
+                       policy=factory(), block_rounds=block_rounds,
+                       device_buffer=False)
+            for _ in range(part.n_shards)]
+        self._spec = NamedSharding(
+            part.mesh, P(part.axes, None, None))
+        self.buf = jax.device_put(
+            jnp.zeros((part.n_shards, self.capacity, self.block_size),
+                      jnp.uint8), self._spec)
+        self.decode_launches = 0
+
+    # --------------------------------------------------------------- stats
+    @property
+    def hits(self) -> int:
+        return sum(c.hits for c in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(c.misses for c in self.shards)
+
+    @property
+    def buffer_bytes(self) -> int:
+        return self.part.n_shards * self.capacity * self.block_size
+
+    @property
+    def per_shard_buffer_bytes(self) -> int:
+        return self.capacity * self.block_size
+
+    def info(self) -> dict:
+        """Aggregate counters in `BlockCache.info` shape, plus the
+        per-shard accounting (`per_shard`: one info dict per shard)."""
+        per = [c.info() for c in self.shards]
+        agg = {k: sum(p[k] for p in per)
+               for k in ("capacity", "resident", "hits", "misses",
+                         "evictions", "installs", "coinstalls",
+                         "bytes_resident")}
+        agg["buffer_bytes"] = self.buffer_bytes
+        agg["decode_launches"] = self.decode_launches
+        agg["policy"] = f"sharded[{self.part.n_shards}x" \
+                        f"{per[0]['policy']}]"
+        agg["per_shard"] = per
+        return agg
+
+    def reset(self) -> None:
+        for c in self.shards:
+            c.reset()
+        self.buf = jax.device_put(
+            jnp.zeros((self.part.n_shards, self.capacity, self.block_size),
+                      jnp.uint8), self._spec)
+
+    # ------------------------------------------------------------ rows_for
+    def rows_for(self, uniq: np.ndarray, decode_stacked) -> jnp.ndarray:
+        """(U,) unique global block ids → (U, block_size) rows through the
+        per-shard caches. `decode_stacked(loc (n_shards, M) i32, n_rounds,
+        valid bool(n_shards, M)) -> (n_shards, M, block_size)` is the
+        collective miss decode (`ShardedResidency._decode_stacked`)."""
+        from repro.api.plan import split_shards
+        part = self.part
+        uniq = np.asarray(uniq, np.int64).reshape(-1)
+        U = uniq.size
+        if U == 0:
+            return jnp.zeros((0, self.block_size), jnp.uint8)
+        shard, _ = split_shards(uniq, part.bounds)
+
+        src_shard = shard.astype(np.int32)
+        src_is_miss = np.zeros(U, bool)
+        src_idx = np.zeros(U, np.int32)
+        # per-shard hit/miss split: each shard's own CachePlan
+        miss_shard, miss_local, miss_upos, miss_slot = [], [], [], []
+        for s in range(part.n_shards):
+            idx_s = np.flatnonzero(shard == s)
+            if idx_s.size == 0:
+                continue
+            cp = self.shards[s].plan(uniq[idx_s])
+            src_is_miss[idx_s] = cp.src_is_miss
+            src_idx[idx_s[~cp.src_is_miss]] = \
+                cp.src_idx[~cp.src_is_miss]
+            m_upos = idx_s[cp.src_is_miss]
+            miss_shard.append(np.full(m_upos.size, s, np.int64))
+            miss_local.append(uniq[m_upos] - part.bounds[s])
+            miss_upos.append(m_upos)
+            miss_slot.append(cp.install_slots)
+
+        if not miss_upos or sum(m.size for m in miss_upos) == 0:
+            slots = _pad_pow2(src_idx)
+            sshard = _pad_pow2(src_shard)
+            return _shard_gather_slots(self.buf, jnp.asarray(sshard),
+                                       jnp.asarray(slots))[:U]
+
+        m_shard = np.concatenate(miss_shard)
+        m_local = np.concatenate(miss_local)
+        m_upos = np.concatenate(miss_upos)
+        m_slot = np.concatenate(miss_slot).astype(np.int32)
+        m_gid = uniq[m_upos]
+
+        # depth-bucketed collective miss decode: one launch per scheduled
+        # round group; shards with no miss in a bucket decode that
+        # bucket's pad slots only (dropped at install, never read)
+        if self.block_rounds is not None:
+            r = self.block_rounds[m_gid]
+            buckets = [(int(v), np.flatnonzero(r == v))
+                       for v in np.unique(r)]
+        else:
+            buckets = [(-1, np.arange(m_gid.size))]
+        pieces, col_off = [], 0
+        m_col = np.zeros(m_gid.size, np.int32)
+        inst_cols = []
+        for rounds, bidx in buckets:
+            counts = np.bincount(m_shard[bidx], minlength=part.n_shards)
+            M = 1 << max(0, int(counts.max(initial=1)) - 1).bit_length()
+            loc = np.zeros((part.n_shards, M), np.int32)
+            valid = np.zeros((part.n_shards, M), bool)
+            order = np.argsort(m_shard[bidx], kind="stable")
+            first = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            pos = np.arange(bidx.size) - first[m_shard[bidx][order]]
+            rows_sh = m_shard[bidx][order]
+            loc[rows_sh, pos] = m_local[bidx][order]
+            valid[rows_sh, pos] = True
+            m_col[bidx[order]] = (col_off + pos).astype(np.int32)
+            pieces.append(decode_stacked(loc, rounds, valid))
+            self.decode_launches += 1
+            col_off += M
+        miss_rows = (pieces[0] if len(pieces) == 1
+                     else jnp.concatenate(pieces, axis=1))
+
+        inst = np.full((part.n_shards, col_off), self.capacity, np.int32)
+        inst[m_shard, m_col] = m_slot
+        src_idx[m_upos] = m_col
+
+        try:
+            self.buf, rows = _shard_install_gather(
+                self.buf, miss_rows, jnp.asarray(inst),
+                jnp.asarray(_pad_pow2(src_shard)),
+                jnp.asarray(_pad_pow2(src_is_miss)),
+                jnp.asarray(_pad_pow2(src_idx)))
+        except BaseException:
+            # per-shard plans already marked misses resident, and the
+            # donated stacked buffer may be gone — drop everything
+            # rather than serve zero rows as hits
+            self.reset()
+            raise
+        return rows[:U]

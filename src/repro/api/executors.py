@@ -159,16 +159,37 @@ class StreamingExecutor:
     `verify=True` recomputes each decoded block's FNV-1a-64 digest on
     device before rows are cropped to spans, raising `BlockDigestError`
     naming the true block id on the first corrupt block of any chunk.
+
+    `sharded=` (a `ShardedResidency`) switches the budget to PER-SHARD
+    residency: chunks cost the max block count any one shard owns of
+    them, decodes run partitioned (each device materializes only its own
+    rows, exact-size, cache bypassed), and `ChunkStats.decoded_bytes`
+    counts per-shard materialized bytes — so a mesh-partitioned archive
+    streams a query n_shards times larger under the same per-device
+    budget.
     """
 
     def __init__(self, store, max_resident_bytes: Optional[int] = None,
                  max_blocks_per_chunk: Optional[int] = None,
                  mode2: bool = True, planner: Optional[QueryPlanner] = None,
-                 verify: bool = False):
+                 verify: bool = False, sharded=None):
         self.store = store
         self.planner = planner or QueryPlanner(store)
         bs = store.block_size
         da = store.decoder.da
+        # mesh-partitioned residency: the budget becomes PER-SHARD — each
+        # device materializes only its own rows of a chunk, so a chunk's
+        # decode cost is the max blocks any ONE shard owns of it. That is
+        # what VRAM-decouples the 50 GB-class range decode per shard.
+        if sharded is not None and da.mode == "global":
+            raise ValueError(
+                "sharded streaming needs a partitioned archive — global/"
+                "wavefront archives cannot partition (decode windows "
+                "cross block bounds)")
+        if sharded is not None and not mode2:
+            raise ValueError("sharded streaming is mode-2 only (the host "
+                             "entropy stage has no partitioned path)")
+        self.sharded = sharded
         anchors = getattr(da, "anchors", None)
         self._anchors = (np.asarray(anchors, np.int64)
                          if anchors is not None and np.asarray(anchors).size
@@ -265,7 +286,28 @@ class StreamingExecutor:
                 nblk = n_blocks
             else:
                 pb = self._piece_blocks(s, ln)
-                nblk = len(cur_blocks | pb)
+                if self.sharded is not None:
+                    # per-shard budget: each device materializes only its
+                    # own rows, one exact-size launch per depth bucket —
+                    # so a chunk's decode cost is the SUM over buckets of
+                    # the max block count any one shard owns in that
+                    # bucket (exactly what `_decode_uncached(pad=False)`
+                    # materializes per shard)
+                    part = self.sharded.part
+                    blk = np.fromiter(cur_blocks | pb, np.int64)
+                    sh = part.shard_of(blk)
+                    br = self.store.decoder.block_rounds
+                    if br is None:
+                        nblk = int(np.bincount(
+                            sh, minlength=part.n_shards).max())
+                    else:
+                        r = br[blk]
+                        nblk = sum(
+                            int(np.bincount(sh[r == v],
+                                            minlength=part.n_shards).max())
+                            for v in np.unique(r))
+                else:
+                    nblk = len(cur_blocks | pb)
             # plan_spans pow2-pads the span batch, so the gather output a
             # chunk materializes is pow2(B) * max_len — cost it that way,
             # or a 5-span chunk would quietly gather 8 rows past budget
@@ -295,12 +337,22 @@ class StreamingExecutor:
         # bypassed here — streaming scans would thrash it.
         _, r0, _, uniq, row_map = plan.host_cover()
         dec = self.store.decoder
-        decode = (dec.decode_blocks if self.mode2
-                  else dec.decode_blocks_host_entropy)
-        # pad_groups=False: depth-bucket launches stay exact-size here for
-        # the same budget reason the selection itself is not pow2-padded
-        rows = decode(uniq.astype(np.int32), verify=self.verify,
-                      pad_groups=False)
+        if self.sharded is not None:
+            # partitioned streaming: exact-size (pad=False) per-shard
+            # decode, cache bypassed (streaming scans would thrash it).
+            # decoded_blocks_last then counts PER-SHARD materialized rows
+            # — the quantity the per-shard budget bounds.
+            dec.launch_rounds_last = []
+            dec.decoded_blocks_last = 0
+            rows = self.sharded._decode_uncached(
+                uniq.astype(np.int64), pad=False, verify=self.verify)
+        else:
+            decode = (dec.decode_blocks if self.mode2
+                      else dec.decode_blocks_host_entropy)
+            # pad_groups=False: depth-bucket launches stay exact-size here
+            # for the same budget reason the selection is not pow2-padded
+            rows = decode(uniq.astype(np.int32), verify=self.verify,
+                          pad_groups=False)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=bs, max_len=plan.max_len)
@@ -323,15 +375,73 @@ class StreamingExecutor:
 class ShardedExecutor:
     """Execute a plan with the unique-block decode fanned out over a mesh.
 
-    The compressed archive is replicated; the plan's unique covering
-    selection — the decode *work* — shards over the mesh axes, then the
-    ragged gather runs on the assembled rows. Mode-2 only.
+    Two residency regimes (`residency`):
+
+      "partition"  — blocks partition into contiguous per-shard ranges
+          and each device holds ONLY its slice of the compressed payload
+          (`repro.core.residency.ShardedResidency`): compressed residency
+          scales with mesh width. Decoded rows ride the per-shard block
+          cache when `cache_blocks > 0` (any named policy or zero-arg
+          factory, incl. "tinylfu"), and only requested rows assemble
+          collectively.
+      "replicate"  — the compressed archive is replicated and only the
+          decode *work* (the block selection) shards: the small-archive
+          fast path.
+      "auto" (default) — partition when the archive can ("ra" mode with
+          at least one block per shard), replicate otherwise.
+
+    Both regimes are depth-bucketed (one launch per scheduled-rounds
+    group) and `verify=True` digest-checks decoded blocks — shard-locally
+    BEFORE assembly on the partitioned path, so `BlockDigestError` names
+    the true global block id. Mode-2 only.
     """
 
-    def __init__(self, store, mesh, axes: Tuple[str, ...] = ("data",)):
+    def __init__(self, store, mesh, axes: Tuple[str, ...] = ("data",),
+                 residency: str = "auto", cache_blocks: int = 0,
+                 cache_policy="lru", verify: bool = False):
+        from repro.core.sharded_decode import _mesh_shards
+        if residency not in ("auto", "partition", "replicate"):
+            raise ValueError(
+                f"residency={residency!r} not in "
+                f"('auto', 'partition', 'replicate')")
         self.store = store
         self.mesh = mesh
         self.axes = axes
+        self.verify = verify
+        dec = store.decoder
+        if residency == "auto":
+            residency = ("partition"
+                         if dec.da.mode == "ra"
+                         and dec.da.n_blocks >= _mesh_shards(mesh, axes)
+                         else "replicate")
+        self.residency = residency
+        if residency == "partition":
+            attach = getattr(store, "attach_sharded", None)
+            if attach is not None:
+                self.sharded = attach(mesh, axes=axes,
+                                      cache_blocks=cache_blocks,
+                                      cache_policy=cache_policy,
+                                      verify=verify)
+            else:   # bare-decoder store adapter: own the residency here
+                from repro.core.residency import ShardedResidency
+                self.sharded = ShardedResidency(
+                    store, mesh, axes=axes, cache_blocks=cache_blocks,
+                    cache_policy=cache_policy, verify=verify)
+        else:
+            if cache_blocks:
+                raise ValueError(
+                    "cache_blocks needs the partitioned regime (the "
+                    "replicated path has no per-shard slot buffer) — "
+                    "pass residency='partition'")
+            self.sharded = None
+
+    def cache_info(self) -> dict:
+        if self.sharded is None:
+            return {"capacity": 0, "resident": 0, "hits": 0, "misses": 0,
+                    "evictions": 0, "installs": 0, "coinstalls": 0,
+                    "bytes_resident": 0, "buffer_bytes": 0,
+                    "decode_launches": 0, "policy": "off"}
+        return self.sharded.cache_info()
 
     def run(self, plan: DecodePlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
         from repro.core.sharded_decode import sharded_decode_blocks
@@ -341,24 +451,35 @@ class ShardedExecutor:
                     jnp.zeros((0,), jnp.int32))
         _, r0, _, uniq, row_map = plan.host_cover()
         dec = self.store.decoder
-        dec.launch_rounds_last = []
-        # depth-bucketed fan-out: one sharded launch per resolve-round
-        # group, so a shallow bucket's shards stop after ITS rounds
-        # instead of the archive-wide bound the plan-free path would run.
-        # Routing through the plan (not dec._meta's default) is what makes
-        # depth a plan-level property here, same as the other executors.
-        groups = plan.depth_groups()
-        if groups is None or (len(groups) == 1
-                              and groups[0][0] >= (dec.da.max_depth or 0)):
-            rows = sharded_decode_blocks(dec, uniq, self.mesh, self.axes)
+        if self.sharded is not None:
+            # partitioned: the residency plane owns the per-shard split,
+            # cache riding, depth bucketing and shard-local verify —
+            # shard-aware work composes there, never in this executor
+            rows = self.sharded.rows_for_blocks(uniq)
         else:
-            parts = [sharded_decode_blocks(dec, uniq[idx], self.mesh,
-                                           self.axes, n_rounds=rounds)
-                     for rounds, idx in groups]
-            order = np.concatenate([idx for _, idx in groups])
-            inv = np.empty(uniq.size, np.int64)
-            inv[order] = np.arange(uniq.size)
-            rows = jnp.concatenate(parts, axis=0)[jnp.asarray(inv)]
+            dec.launch_rounds_last = []
+            # depth-bucketed fan-out: one sharded launch per resolve-round
+            # group, so a shallow bucket's shards stop after ITS rounds
+            # instead of the archive-wide bound the plan-free path would
+            # run. Routing through the plan (not dec._meta's default) is
+            # what makes depth a plan-level property here, same as the
+            # other executors.
+            groups = plan.depth_groups()
+            if groups is None or (len(groups) == 1
+                                  and groups[0][0] >= (dec.da.max_depth
+                                                       or 0)):
+                rows = sharded_decode_blocks(dec, uniq, self.mesh,
+                                             self.axes)
+            else:
+                parts = [sharded_decode_blocks(dec, uniq[idx], self.mesh,
+                                               self.axes, n_rounds=rounds)
+                         for rounds, idx in groups]
+                order = np.concatenate([idx for _, idx in groups])
+                inv = np.empty(uniq.size, np.int64)
+                inv[order] = np.arange(uniq.size)
+                rows = jnp.concatenate(parts, axis=0)[jnp.asarray(inv)]
+            if self.verify:
+                dec.verify_rows(uniq, rows)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=plan.block_size, max_len=plan.max_len)

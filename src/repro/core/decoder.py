@@ -557,6 +557,27 @@ class Decoder:
             return None
         return [(int(v), np.flatnonzero(r == v)) for v in vals]
 
+    def check_digests(self, sel, got: np.ndarray) -> None:
+        """Compare computed u64 digests against the archive's `block_fnv`
+        table at global block ids `sel`; raises `BlockDigestError` naming
+        the first mismatching block. Split out of `verify_rows` so paths
+        that compute digests elsewhere (the sharded stacked decode checks
+        them shard-locally before assembly) raise the same error with the
+        TRUE block id."""
+        sel = np.asarray(sel, np.int64).reshape(-1)
+        got = np.asarray(got, np.uint64).reshape(-1)
+        if sel.size == 0:
+            return
+        want = self.archive.block_fnv[sel]
+        bad = np.flatnonzero(got != want)
+        if bad.size:
+            b = int(sel[bad[0]])
+            raise BlockDigestError(
+                f"block {b} digest mismatch: decoded "
+                f"{int(got[bad[0]]):#018x} != stored "
+                f"{int(want[bad[0]]):#018x} "
+                f"({bad.size} of {sel.size} selected blocks corrupt)")
+
     def verify_rows(self, sel, rows: jnp.ndarray) -> None:
         """Recompute each decoded row's 8-byte-stride FNV-1a-64 on device
         and compare against the archive's `block_fnv` table; raises
@@ -568,15 +589,7 @@ class Decoder:
             rows, jnp.asarray(self.archive.block_len[sel]))
         got = ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
                | np.asarray(flo).astype(np.uint64))
-        want = self.archive.block_fnv[sel]
-        bad = np.flatnonzero(got != want)
-        if bad.size:
-            b = int(sel[bad[0]])
-            raise BlockDigestError(
-                f"block {b} digest mismatch: decoded "
-                f"{int(got[bad[0]]):#018x} != stored "
-                f"{int(want[bad[0]]):#018x} "
-                f"({bad.size} of {sel.size} selected blocks corrupt)")
+        self.check_digests(sel, got)
 
     # ---------------------------------------------------- window decode
     def _window_rows(self, first: int, last: int) -> jnp.ndarray:

@@ -176,6 +176,8 @@ class CompressedResidentStore:
             self._starts64 = None
             self._max_len = self._max_span = 1
         self._planner = self._executor = None
+        # mesh-partitioned residency, attached on demand (attach_sharded)
+        self.sharded: Optional["ShardedResidency"] = None
 
     def _api(self):
         """Lazy (planner, executor) pair — repro.api imports this module."""
@@ -196,14 +198,26 @@ class CompressedResidentStore:
 
     @property
     def cache_hits(self) -> int:
-        return self._cache.hits if self._cache is not None else 0
+        if self._cache is not None:
+            return self._cache.hits
+        if self.sharded is not None and self.sharded._cache is not None:
+            return self.sharded._cache.hits
+        return 0
 
     @property
     def cache_misses(self) -> int:
-        return self._cache.misses if self._cache is not None else 0
+        if self._cache is not None:
+            return self._cache.misses
+        if self.sharded is not None and self.sharded._cache is not None:
+            return self.sharded._cache.misses
+        return 0
 
     def cache_info(self) -> dict:
         if self._cache is None:
+            # when only the mesh-partitioned residency carries a cache,
+            # its per-shard counters ARE the store's cache accounting
+            if self.sharded is not None and self.sharded._cache is not None:
+                return self.sharded.cache_info()
             # same keys as BlockCache.info(), all zeroed — callers can
             # read counters without checking whether the cache is on
             return {"capacity": 0, "resident": 0, "hits": 0, "misses": 0,
@@ -211,6 +225,25 @@ class CompressedResidentStore:
                     "bytes_resident": 0, "buffer_bytes": 0,
                     "decode_launches": 0, "policy": "off"}
         return self._cache.info()
+
+    # ------------------------------------------------- sharded residency
+    def attach_sharded(self, mesh, axes: Tuple[str, ...] = ("data",),
+                       cache_blocks: int = 0,
+                       cache_policy: Union[str, object] = "lru",
+                       verify: bool = False) -> "ShardedResidency":
+        """Partition the compressed archive across `mesh` and attach the
+        sharded residency plane (idempotent for a matching mesh/axes —
+        repeat calls with the same geometry reuse the existing partition
+        and its warm per-shard cache)."""
+        sr = self.sharded
+        if (sr is not None and sr.part.mesh == mesh and sr.axes == axes
+                and sr.cache_blocks == int(cache_blocks)
+                and sr.verify == verify):
+            return sr
+        self.sharded = ShardedResidency(
+            self, mesh, axes=axes, cache_blocks=cache_blocks,
+            cache_policy=cache_policy, verify=verify)
+        return self.sharded
 
     # ------------------------------------------------------------ internals
     def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
@@ -302,3 +335,116 @@ class CompressedResidentStore:
         out, _ = executor.run(planner.plan_records(ids_np, record_bytes),
                               mode2=mode2)
         return out
+
+
+class ShardedResidency:
+    """Mesh-partitioned compressed residency for one store.
+
+    Owns the `ShardPartition` (each device holds only its contiguous
+    block range's payload slice — compressed residency scales with mesh
+    width) plus, when `cache_blocks > 0`, the per-shard decoded-block
+    cache (`repro.api.cache.ShardedBlockCache`: every shard runs its own
+    hit/miss split against its own slot range of one stacked
+    mesh-sharded buffer). `verify=True` digest-checks every decoded
+    stacked launch shard-locally BEFORE assembly (`BlockDigestError`
+    names the true global block id).
+
+    This is the residency plane `ShardedExecutor` and `StreamingExecutor`
+    ride; shard-aware work composes here and at `CachePlan`, never inside
+    the executors themselves.
+    """
+
+    def __init__(self, store: CompressedResidentStore, mesh,
+                 axes: Tuple[str, ...] = ("data",), cache_blocks: int = 0,
+                 cache_policy: Union[str, object] = "lru",
+                 verify: bool = False):
+        from repro.core.sharded_decode import partition_archive
+        self.store = store
+        self.decoder = store.decoder
+        self.axes = axes
+        self.verify = verify
+        self.cache_blocks = int(cache_blocks)
+        self.part = partition_archive(store.decoder, mesh, axes)
+        if self.cache_blocks > 0:
+            from repro.api.cache import ShardedBlockCache
+            self._cache = ShardedBlockCache(
+                self.cache_blocks, store.block_size, self.part.n_blocks,
+                self.part, policy=cache_policy,
+                block_rounds=store.decoder.block_rounds)
+        else:
+            self._cache = None
+
+    # ----------------------------------------------------------- accounting
+    def per_shard_bytes(self) -> int:
+        """Device-resident bytes on ONE shard: its compressed payload
+        slice plus its slot range of the decoded-block cache buffer."""
+        tot = self.part.per_shard_device_bytes
+        if self._cache is not None:
+            tot += self._cache.per_shard_buffer_bytes
+        return tot
+
+    def device_bytes(self) -> int:
+        """Total device-resident bytes across the mesh (what a serving
+        budget bounds): sum of every shard's compressed + cache bytes."""
+        return self.part.n_shards * self.per_shard_bytes()
+
+    def cache_info(self) -> dict:
+        if self._cache is None:
+            return {"capacity": 0, "resident": 0, "hits": 0, "misses": 0,
+                    "evictions": 0, "installs": 0, "coinstalls": 0,
+                    "bytes_resident": 0, "buffer_bytes": 0,
+                    "decode_launches": 0, "policy": "off"}
+        return self._cache.info()
+
+    # ----------------------------------------------------------------- rows
+    def rows_for_blocks(self, uniq: np.ndarray) -> jnp.ndarray:
+        """(U,) unique global block ids → (U, block_size) rows through
+        the partitioned archive (and the per-shard cache when enabled).
+        Resets the decoder's per-call launch instrumentation like
+        `decode_blocks` does."""
+        dec = self.decoder
+        dec.launch_rounds_last = []
+        dec.decoded_blocks_last = 0
+        uniq = np.asarray(uniq, np.int64).reshape(-1)
+        if self._cache is None:
+            return self._decode_uncached(uniq)
+        return self._cache.rows_for(uniq, self._decode_stacked)
+
+    def _decode_stacked(self, loc: np.ndarray, n_rounds: int,
+                        valid: np.ndarray) -> jnp.ndarray:
+        """Collective miss decode the sharded cache drives: one stacked
+        (n_shards, S) launch at this depth bucket's rounds. Pad slots
+        (`~valid`) may hold garbage under a shallow bucket's rounds —
+        verification masks them; the cache install drops them."""
+        from repro.core.sharded_decode import (partitioned_rows,
+                                               verify_stacked)
+        dec = self.decoder
+        stacked = partitioned_rows(dec, self.part, loc, n_rounds=n_rounds)
+        dec.launch_rounds_last.append(
+            dec.da.max_depth if n_rounds == -1 else n_rounds)
+        dec.decoded_blocks_last += int(loc.shape[1])
+        if self.verify:
+            verify_stacked(dec, self.part, stacked, loc, valid=valid)
+        return stacked
+
+    def _decode_uncached(self, uniq: np.ndarray, pad: bool = True,
+                         verify: Optional[bool] = None) -> jnp.ndarray:
+        """Cache-bypassing partitioned decode, depth-bucketed: one
+        collective launch per scheduled-rounds group (`pad=False` keeps
+        exact per-shard widths — the streaming budget path, which also
+        passes its own `verify` instead of this residency's default)."""
+        from repro.core.sharded_decode import partitioned_decode_blocks
+        dec = self.decoder
+        verify = self.verify if verify is None else verify
+        groups = dec._ra_groups(uniq)
+        if groups is None:
+            return partitioned_decode_blocks(dec, self.part, uniq,
+                                             verify=verify, pad=pad)
+        pieces = [partitioned_decode_blocks(dec, self.part, uniq[idx],
+                                            n_rounds=rounds,
+                                            verify=verify, pad=pad)
+                  for rounds, idx in groups]
+        order = np.concatenate([idx for _, idx in groups])
+        inv = np.empty(order.size, np.int64)
+        inv[order] = np.arange(order.size)
+        return jnp.concatenate(pieces, axis=0)[jnp.asarray(inv)]

@@ -1,18 +1,41 @@
 """Pod-scale block-parallel decode (beyond-paper: the paper's single-GPU
 pipeline fanned out over a TPU mesh).
 
-The compressed archive is REPLICATED (that's the economics of compressed
-residency: 50 GB raw → ~13 GB compressed fits everywhere); the block
-selection — i.e. the decode *work* — is sharded over the chosen mesh axes,
-so decode throughput scales with the data-parallel width and each device
-materializes only its own shard of output. No collectives are needed in the
-decode itself: absolute offsets make every block's work independent, which
-is precisely the paper's format property doing the distribution for free.
+Two residency regimes, chosen by archive size:
+
+  ``replicate_archive``   — the compressed archive is REPLICATED on every
+      device and only the decode *work* (the block selection) shards over
+      the mesh axes. The small-archive fast path: no placement math, no
+      collectives in the decode itself (absolute offsets make every
+      block's work independent).
+
+  ``partition_archive``   — blocks partition into CONTIGUOUS per-shard
+      ranges and each shard holds only its slice of the compressed
+      payload planes (``NamedSharding`` placement over the leading shard
+      dim). Per-shard word-offset tables are REBASED to the shard's own
+      words slice, so shard-local decode positions stay int32-exact even
+      when the archive's flat word buffer exceeds 2^31 words. This is
+      what makes compressed residency itself scale with mesh width: per
+      device, resident bytes ~= total_compressed / n_shards + one
+      shard's padding slack.
+
+Partitioned decode runs the SAME ``_decode_sel_core`` as every other
+path — "ra" block decode touches only per-block streams, so a shard-local
+(padded) table view plus the shared static geometry tuple is a complete
+decode context. Selections lower to one (n_shards, S) local-id matrix,
+every shard decodes its own S rows in one shard_map launch, and only the
+requested rows are assembled collectively (a row gather over the stacked
+decode output — never an all-gather of full blocks).
+
+Compiled fns are cached per (mesh, axes, static meta, backend) — the old
+code rebuilt ``jax.jit(_run)`` inside every call, so no jit cache was
+ever reused and every call retraced.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,19 +45,83 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.decoder import Decoder, _decode_sel_core
+from repro.core.decoder import (Decoder, _decode_sel_core, _fnv_rows_jit,
+                                _pad_pow2)
 
 
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _mesh_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ----------------------------------------------------------------- jit cache
+# compiled shard_map launches keyed on everything jit-static: the mesh,
+# the sharded axes, the archive's static geometry tuple (which carries the
+# launch's n_rounds) and the backend. Selection SHAPES are handled by each
+# cached fn's own jit cache — so a repeat call with a same-shape selection
+# compiles nothing new (the old per-call `jax.jit(_run)` threw the cache
+# away every time).
+_JIT_CACHE: dict = {}
+
+
+def _compiled_calls() -> int:
+    """Total jit-cache entries across every cached sharded launch — the
+    retrace instrumentation the no-recompile test pins down."""
+    return sum(f._cache_size() for f in _JIT_CACHE.values())
+
+
+def _replicated_fn(mesh: Mesh, axes: Tuple[str, ...], meta, backend: str,
+                   arrays):
+    key = ("rep", mesh, axes, meta, backend)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        specs = jax.tree.map(lambda _: P(), arrays)
+
+        @partial(shard_map, mesh=mesh, in_specs=(specs, P(axes)),
+                 out_specs=P(axes))
+        def _run(arr, sel_shard):
+            return _decode_sel_core(arr, sel_shard, meta, backend)
+
+        fn = jax.jit(_run)
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def _partitioned_fn(mesh: Mesh, axes: Tuple[str, ...], meta, backend: str,
+                    arrays):
+    key = ("part", mesh, axes, meta, backend)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        specs = jax.tree.map(
+            lambda x: P(axes, *([None] * (x.ndim - 1))), arrays)
+
+        @partial(shard_map, mesh=mesh, in_specs=(specs, P(axes, None)),
+                 out_specs=P(axes, None, None))
+        def _run(arr, loc):
+            arr0 = jax.tree.map(lambda x: x[0], arr)
+            return _decode_sel_core(arr0, loc[0], meta, backend)[None]
+
+        fn = jax.jit(_run)
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+# ------------------------------------------------------- replicated fan-out
 def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
                           axes: Tuple[str, ...] = ("data",),
                           n_rounds: int = -1) -> jnp.ndarray:
-    """Decode `sel` blocks with the work sharded over `axes` of `mesh`.
+    """Decode `sel` blocks with the work sharded over `axes` of `mesh`
+    (replicated-archive regime).
 
-    Returns (len(sel), block_size) u8, sharded over axes on dim 0. `sel` is
-    padded to a multiple of the axis size (dup blocks, cropped after).
-    `n_rounds` bounds the pointer-resolve rounds for this launch (-1 = the
-    archive-wide `max_depth`); ShardedExecutor passes each depth bucket's
-    schedule so shallow shards stop early.
+    Returns (len(sel), block_size) u8, sharded over axes on dim 0. `sel`
+    is padded to n_shards * pow2(ceil(n / n_shards)) — per-shard widths
+    stay powers of two, so distinct selection sizes retrace per pow2
+    bucket, not per size. `n_rounds` bounds the pointer-resolve rounds
+    for this launch (-1 = the archive-wide `max_depth`); ShardedExecutor
+    passes each depth bucket's schedule so shallow shards stop early.
     """
     if dec.da.mode == "global":
         # a shard's selection is an arbitrary block subset, but global
@@ -45,26 +132,20 @@ def sharded_decode_blocks(dec: Decoder, sel: Sequence[int], mesh: Mesh,
             'sharded decode supports "ra" archives only; global/wavefront '
             "selections decode through contiguous (anchor) windows — use "
             "DeviceExecutor/StreamingExecutor for global archives")
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n_shards = _mesh_shards(mesh, axes)
     sel = np.asarray(sel, np.int32)
     n = sel.shape[0]
-    pad = (-n) % n_shards
-    if pad:
-        sel = np.concatenate([sel, np.repeat(sel[-1:], pad)])
+    cap = n_shards * _pow2(-(-max(n, 1) // n_shards))
+    if cap != n:
+        sel = np.concatenate([sel, np.repeat(sel[-1:] if n else
+                                             np.zeros(1, np.int32),
+                                             cap - n)])
 
     meta = dec._meta(len(sel), n_rounds=n_rounds)
     dec.launch_rounds_last.append(
         dec.da.max_depth if n_rounds == -1 else n_rounds)
-    backend = dec.backend
-    arrays = dec.arrays
-
-    @partial(shard_map, mesh=mesh,
-             in_specs=(jax.tree.map(lambda _: P(), arrays), P(axes)),
-             out_specs=P(axes))
-    def _run(arr, sel_shard):
-        return _decode_sel_core(arr, sel_shard, meta, backend)
-
-    out = jax.jit(_run)(arrays, jnp.asarray(sel))
+    out = _replicated_fn(mesh, axes, meta, dec.backend, dec.arrays)(
+        dec.arrays, jnp.asarray(sel))
     return out[:n]
 
 
@@ -74,3 +155,208 @@ def replicate_archive(dec: Decoder, mesh: Mesh) -> None:
     dec.arrays = jax.tree.map(
         lambda x: jax.device_put(x, spec) if hasattr(x, "dtype") else x,
         dec.arrays)
+
+
+# ------------------------------------------------------- partitioned regime
+@dataclasses.dataclass
+class ShardPartition:
+    """A mesh-partitioned compressed archive: contiguous per-shard block
+    ranges, per-shard payload slices stacked on a leading shard dim and
+    placed with NamedSharding, word-offset tables rebased shard-locally.
+    """
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    n_shards: int
+    bounds: np.ndarray          # i64[n_shards + 1] block partition bounds
+    arrays: dict                # stacked pytree, leading dim sharded
+    nb_max: int                 # per-shard table rows (padded)
+    w_max: int                  # per-shard words (padded)
+    block_size: int
+    n_blocks: int
+
+    def shard_of(self, blocks: np.ndarray) -> np.ndarray:
+        """Owning shard per global block id."""
+        from repro.api.plan import split_shards
+        return split_shards(blocks, self.bounds)[0]
+
+    def local_ids(self, blocks: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Global block ids → (owning shard, shard-local id)."""
+        from repro.api.plan import split_shards
+        return split_shards(blocks, self.bounds)
+
+    def global_ids(self, loc: np.ndarray) -> np.ndarray:
+        """(n_shards, S) local-id matrix → global block ids."""
+        return self.bounds[:-1, None] + np.asarray(loc, np.int64)
+
+    @property
+    def per_shard_device_bytes(self) -> int:
+        """Compressed bytes resident on ONE device: its padded slice of
+        every payload plane."""
+        tot = 0
+        for x in self.arrays.values():
+            tot += (x.size // self.n_shards) * x.dtype.itemsize
+        return tot
+
+    def shard_blocks(self) -> np.ndarray:
+        return np.diff(self.bounds)
+
+
+def partition_archive(dec: Decoder, mesh: Mesh,
+                      axes: Tuple[str, ...] = ("data",)) -> ShardPartition:
+    """Partition a mode-"ra" archive's compressed planes across the mesh.
+
+    Bounds balance the per-shard WORD footprint (blocks compress
+    unevenly; splitting by block count could leave one shard holding most
+    of the payload). Each shard's tables are sliced to its block range,
+    padded to the common (nb_max, w_max) geometry, and the word offsets
+    are rebased by the shard's first word — per-shard decode positions
+    are then offsets into the shard's own words slice, int32-exact
+    regardless of where the shard's payload sat in the global buffer.
+    """
+    if dec.da.mode != "ra":
+        raise NotImplementedError(
+            'partition_archive supports "ra" archives only; global/'
+            "wavefront decode windows cross block bounds — use "
+            "replicate_archive")
+    n_shards = _mesh_shards(mesh, axes)
+    a = dec.archive
+    n_blocks = int(a.n_blocks)
+    if n_blocks < n_shards:
+        raise ValueError(
+            f"{n_blocks} blocks cannot partition over {n_shards} shards — "
+            f"use replicate_archive for sub-mesh archives")
+    # block b's words live in [w_start[b], w_start[b+1]) — the encoder
+    # lays streams out block-major/cumulative; min over the 4 stream
+    # columns is the block's first word whatever the column order
+    w_start = np.asarray(a.word_off, np.int64).min(axis=1)
+    if np.any(np.diff(w_start) < 0) or (n_blocks and w_start[0] != 0):
+        raise NotImplementedError(
+            "archive words are not block-contiguous; cannot slice "
+            "per-shard payloads — use replicate_archive")
+    w_end = np.concatenate([w_start[1:], [np.int64(a.words.size)]])
+
+    # balanced bounds: cut at the blocks nearest the equal-words targets,
+    # then force strict monotonicity (every shard owns >= 1 block)
+    total_words = int(a.words.size)
+    targets = (np.arange(1, n_shards) * total_words) // n_shards
+    inner = np.searchsorted(w_start, targets, side="left")
+    bounds = np.zeros(n_shards + 1, np.int64)
+    bounds[-1] = n_blocks
+    for i in range(1, n_shards):
+        lo = bounds[i - 1] + 1
+        hi = n_blocks - (n_shards - i)
+        bounds[i] = min(max(int(inner[i - 1]), lo), hi)
+
+    nb = np.diff(bounds)
+    nb_max = int(nb.max())
+    w_lo = w_start[bounds[:-1]]
+    w_hi = w_end[bounds[1:] - 1]
+    w_max = int((w_hi - w_lo).max())
+    if w_max >= 2**31:
+        raise ValueError(
+            f"one shard would hold {w_max} words >= 2^31 — rebased "
+            f"word offsets must stay int32; widen the mesh")
+
+    words_s = np.zeros((n_shards, w_max), np.uint16)
+    word_off_s = np.zeros((n_shards, nb_max, 4), np.int32)
+    n_syms_s = np.zeros((n_shards, nb_max, 4), a.n_syms.dtype)
+    lanes_s = np.zeros((n_shards, nb_max, 4), a.lanes.dtype)
+    n_cmds_s = np.zeros((n_shards, nb_max), a.n_cmds.dtype)
+    start_s = np.zeros((n_shards, nb_max), np.int32)
+    len_s = np.zeros((n_shards, nb_max), a.block_len.dtype)
+    for s in range(n_shards):
+        b0, b1 = int(bounds[s]), int(bounds[s + 1])
+        words_s[s, :w_hi[s] - w_lo[s]] = a.words[w_lo[s]:w_hi[s]]
+        # the rebase: shard-local word offsets into the shard's own slice
+        word_off_s[s, :b1 - b0] = (
+            np.asarray(a.word_off[b0:b1], np.int64)
+            - w_lo[s]).astype(np.int32)
+        n_syms_s[s, :b1 - b0] = a.n_syms[b0:b1]
+        lanes_s[s, :b1 - b0] = a.lanes[b0:b1]
+        n_cmds_s[s, :b1 - b0] = a.n_cmds[b0:b1]
+        # low 32 bits, same wraparound semantics as `to_device`
+        start_s[s, :b1 - b0] = np.asarray(a.block_start[b0:b1],
+                                          np.int64).astype(np.int32)
+        len_s[s, :b1 - b0] = a.block_len[b0:b1]
+
+    def put(x):
+        spec = NamedSharding(mesh, P(axes, *([None] * (x.ndim - 1))))
+        return jax.device_put(jnp.asarray(x), spec)
+
+    arrays = {"words": put(words_s), "word_off": put(word_off_s),
+              "n_syms": put(n_syms_s), "lanes": put(lanes_s),
+              "n_cmds": put(n_cmds_s), "block_start": put(start_s),
+              "block_len": put(len_s)}
+    return ShardPartition(mesh=mesh, axes=axes, n_shards=n_shards,
+                          bounds=bounds, arrays=arrays, nb_max=nb_max,
+                          w_max=w_max, block_size=dec.da.block_size,
+                          n_blocks=n_blocks)
+
+
+def partitioned_rows(dec: Decoder, part: ShardPartition, loc: np.ndarray,
+                     n_rounds: int = -1) -> jnp.ndarray:
+    """(n_shards, S) shard-local block ids → (n_shards, S, block_size) u8
+    stacked rows, one collective shard_map launch. The low-level entry:
+    callers own the loc-matrix construction (and its padding semantics —
+    pad slots decode the shard's block 0 and must not be read when the
+    launch runs fewer rounds than that block needs)."""
+    meta = dec._meta(int(loc.shape[1]), n_rounds=n_rounds)
+    fn = _partitioned_fn(part.mesh, part.axes, meta, dec.backend,
+                         part.arrays)
+    return fn(part.arrays, jnp.asarray(loc, jnp.int32))
+
+
+def verify_stacked(dec: Decoder, part: ShardPartition,
+                   stacked: jnp.ndarray, loc: np.ndarray,
+                   valid: Optional[np.ndarray] = None) -> None:
+    """Shard-local digest check of a stacked decode, BEFORE assembly:
+    recompute every row's 8-byte-stride FNV-1a-64 on device and compare
+    against the archive table at the true global block ids. `valid`
+    masks pad slots (their rows may be garbage when the launch ran a
+    shallow bucket's rounds). Raises `BlockDigestError` naming the true
+    block id."""
+    n_shards, S, bs = stacked.shape
+    gids = part.global_ids(loc).reshape(-1)
+    blen = dec.archive.block_len[gids]
+    fhi, flo = _fnv_rows_jit(stacked.reshape(-1, bs), jnp.asarray(blen))
+    got = ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
+           | np.asarray(flo).astype(np.uint64))
+    if valid is not None:
+        keep = np.asarray(valid, bool).reshape(-1)
+        gids, got = gids[keep], got[keep]
+    dec.check_digests(gids, got)
+
+
+def partitioned_decode_blocks(dec: Decoder, part: ShardPartition,
+                              sel: Sequence[int], n_rounds: int = -1,
+                              verify: bool = False,
+                              pad: bool = True) -> jnp.ndarray:
+    """Decode an arbitrary block selection against a partitioned archive:
+    (len(sel), block_size) u8 rows in selection order.
+
+    The selection splits per owning shard into one (n_shards, S) local-id
+    matrix (S pow2-padded unless `pad=False` — the streaming budget path
+    keeps exact sizes); each shard decodes only its own rows, and the
+    requested rows are assembled with one collective row gather over the
+    stacked output. Appends this launch's round count to
+    `dec.launch_rounds_last` and adds the PER-SHARD materialized row
+    count S to `dec.decoded_blocks_last` (per-shard residency is the
+    quantity budgets bound in this regime)."""
+    from repro.api.plan import shard_selection
+    sel = np.asarray(sel, np.int64).reshape(-1)
+    bs = part.block_size
+    if sel.size == 0:
+        return jnp.zeros((0, bs), jnp.uint8)
+    shard, local = part.local_ids(sel)
+    loc, flat_idx, valid = shard_selection(shard, local, part.n_shards,
+                                           pad=pad)
+    rounds = dec.da.max_depth if n_rounds == -1 else n_rounds
+    stacked = partitioned_rows(dec, part, loc, n_rounds=n_rounds)
+    dec.launch_rounds_last.append(rounds)
+    dec.decoded_blocks_last += int(loc.shape[1])
+    if verify:
+        verify_stacked(dec, part, stacked, loc, valid=valid)
+    take = jnp.asarray(_pad_pow2(flat_idx.astype(np.int32)))
+    rows = stacked.reshape(part.n_shards * loc.shape[1], bs)[take]
+    return rows[:sel.size]

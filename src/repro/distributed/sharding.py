@@ -23,6 +23,11 @@ from jax.sharding import PartitionSpec as P
 # logical axis -> mesh axes (None = replicated)
 DEFAULT_RULES = {
     "batch": ("pod", "data"),
+    "blocks": "data",          # archive-shard dim: a mesh-partitioned
+                               # archive's stacked per-shard payload
+                               # planes (core.sharded_decode) lead with
+                               # this axis — contiguous block ranges, one
+                               # compressed slice resident per shard
     "seq": None,
     "kv_seq": "model",         # decode-time flash-decode sharding
     "embed": "data",           # FSDP dim on weights

@@ -1,0 +1,218 @@
+"""Mesh-partitioned compressed residency — subprocesses with 8 forced
+host devices (same harness as test_sharded.py: the device-count flag must
+never be set in-process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_PRELUDE = """
+    import numpy as np
+    from repro.data.fastq import make_fastq
+    from repro.core import encoder
+    from repro.core.residency import CompressedResidentStore
+    from repro.compat import make_mesh
+    data = make_fastq("platinum", n_reads=500, seed=7)
+    a = encoder.encode(data, block_size=4096)
+    s = CompressedResidentStore(a, backend="ref")
+    dec = s.decoder
+    mesh = make_mesh((8,), ("data",))
+"""
+
+
+def _run(code: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_PRELUDE) +
+         textwrap.dedent(code)],
+        capture_output=True, text=True, env=_ENV, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_partitioned_bit_identity_residency_bound_and_no_retrace():
+    """Core tentpole invariants in one mesh spin-up: a shard-partitioned
+    archive decodes bit-identically to the replicated path, per-device
+    compressed-resident bytes stay <= total/n_shards + one shard's slack
+    (cut granularity is one block, tables pad to the widest shard), and a
+    repeat same-shape call compiles nothing new in either regime."""
+    out = _run("""
+        from repro.core.sharded_decode import (partition_archive,
+            partitioned_decode_blocks, sharded_decode_blocks,
+            replicate_archive, _compiled_calls)
+        ref = np.frombuffer(data, np.uint8)
+        part = partition_archive(dec, mesh)
+        assert part.n_shards == 8 and part.bounds[0] == 0
+        assert part.bounds[-1] == a.n_blocks
+        # bit-identity: full archive + a shuffled subset, vs replicated
+        rows = partitioned_decode_blocks(dec, part, np.arange(a.n_blocks))
+        assert np.array_equal(
+            np.asarray(rows).reshape(-1)[:ref.size], ref)
+        rng = np.random.default_rng(0)
+        sub = rng.permutation(a.n_blocks)[:13]
+        got = np.asarray(partitioned_decode_blocks(dec, part, sub))
+        want = np.asarray(dec.decode_blocks(sub.astype(np.int32)))
+        assert np.array_equal(got, want)
+        # residency bound: total/n_shards + one shard's slack (the widest
+        # block's words + the padded table rows every shard carries)
+        total = sum(np.asarray(v).nbytes for v in dec.arrays.values())
+        w_start = np.asarray(a.word_off, np.int64).min(axis=1)
+        w_end = np.concatenate([w_start[1:], [np.int64(a.words.size)]])
+        slack = int((w_end - w_start).max()) * 2 + part.nb_max * 64
+        assert part.per_shard_device_bytes <= total // 8 + slack, (
+            part.per_shard_device_bytes, total // 8, slack)
+        # repeat same-shape calls compile nothing new, both regimes
+        c0 = _compiled_calls()
+        partitioned_decode_blocks(dec, part, sub)
+        assert _compiled_calls() == c0, "partitioned path retraced"
+        replicate_archive(dec, mesh)
+        sharded_decode_blocks(dec, np.arange(16), mesh)
+        c1 = _compiled_calls()
+        sharded_decode_blocks(dec, np.arange(8, 24), mesh)
+        assert _compiled_calls() == c1, "replicated path retraced"
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_executor_cache_hits_on_zipfian_repeat():
+    """ShardedExecutor (auto -> partition) rides the per-shard block
+    cache: a repeated Zipfian selection reports nonzero hits, counters
+    split per shard, and cached re-reads stay bit-identical."""
+    out = _run("""
+        from repro.api.executors import ShardedExecutor
+        from repro.api.plan import QueryPlanner
+        planner = QueryPlanner(s)
+        sx = ShardedExecutor(s, mesh, cache_blocks=8)
+        assert sx.residency == "partition"
+        bs = a.block_size
+        rng = np.random.default_rng(2)
+        zipf = np.minimum(rng.zipf(1.5, size=6), a.n_blocks - 1)
+        plans = [planner.plan_spans(zipf * bs + 3,
+                                    np.full(zipf.size, bs // 2))
+                 for _ in range(3)]
+        outs = [np.asarray(sx.run(p)[0]) for p in plans]
+        assert np.array_equal(outs[0], outs[1])
+        assert np.array_equal(outs[0], outs[2])
+        ref = np.frombuffer(data, np.uint8)
+        for b, row in zip(zipf, outs[0]):
+            lo = int(b) * bs + 3
+            assert bytes(row[:bs // 2]) == data[lo:lo + bs // 2]
+        ci = sx.cache_info()
+        assert ci["hits"] > 0 and ci["misses"] > 0
+        assert len(ci["per_shard"]) == 8
+        assert sum(p["hits"] for p in ci["per_shard"]) == ci["hits"]
+        assert s.cache_hits == ci["hits"]   # store falls through
+        # tinylfu composes unchanged through the per-shard wrapper
+        s2 = CompressedResidentStore(a, backend="ref")
+        sx2 = ShardedExecutor(s2, mesh, cache_blocks=8,
+                              cache_policy="tinylfu")
+        for p in plans:
+            sx2.run(p)
+        assert sx2.cache_info()["hits"] > 0
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_streaming_per_shard_budget():
+    """Partitioned streaming: every chunk's per-shard residency stays
+    under the budget and the concatenated stream is bit-perfect — the
+    VRAM-decoupled range decode, per shard."""
+    out = _run("""
+        from repro.api.address import ByteRange
+        from repro.api.executors import StreamingExecutor
+        sr = s.attach_sharded(mesh)
+        bs = a.block_size
+        budget = 6 * bs
+        # one small span per block, scattered across every shard — the
+        # shape where per-shard decode accounting decouples VRAM (each
+        # block still decodes whole; a contiguous range would hit one
+        # shard at a time and gain nothing)
+        addrs = [ByteRange(b * bs + 17, b * bs + 17 + 64)
+                 for b in range(a.n_blocks)]
+        want = b"".join(data[b * bs + 17:b * bs + 17 + 64]
+                        for b in range(a.n_blocks))
+        st = StreamingExecutor(s, max_resident_bytes=budget, sharded=sr)
+        out = np.concatenate(list(st.chunks(addrs)))
+        assert out.tobytes() == want
+        for cs in st.chunk_log:
+            assert cs.resident_bytes <= budget, cs
+        # bit-identical to the unsharded stream, which needs MORE chunks
+        # under the same budget: it accounts every covering block where
+        # the per-shard budget only pays each shard's own max
+        st2 = StreamingExecutor(s, max_resident_bytes=budget)
+        out2 = np.concatenate(list(st2.chunks(addrs)))
+        assert out2.tobytes() == want
+        for cs in st2.chunk_log:
+            assert cs.resident_bytes <= budget, cs
+        assert len(st2.chunk_log) > len(st.chunk_log), (
+            len(st2.chunk_log), len(st.chunk_log))
+        # a full contiguous range stays bit-perfect and budget-bounded too
+        st3 = StreamingExecutor(s, max_resident_bytes=budget, sharded=sr)
+        out3 = np.concatenate(
+            list(st3.chunks([ByteRange(0, len(data))])))
+        assert out3.tobytes() == data
+        for cs in st3.chunk_log:
+            assert cs.resident_bytes <= budget, cs
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_frontend_budget_sums_per_shard_bytes():
+    """ServingFrontend's device budget counts a mesh-partitioned archive
+    as the sum of per-shard compressed + cache bytes, and rejects a
+    budget below that sum at construction."""
+    out = _run("""
+        from repro.api.archive import GenomicArchive
+        from repro.serving.frontend import ServingFrontend
+        ga = GenomicArchive.from_bytes(data, block_size=4096,
+                                       backend="ref")
+        sr = ga.store.attach_sharded(mesh, cache_blocks=4)
+        fe = ServingFrontend(ga, device_budget_bytes=sr.device_bytes())
+        assert fe.device_bytes() == sr.device_bytes()
+        assert sr.device_bytes() == 8 * sr.per_shard_bytes()
+        assert sr.per_shard_bytes() == (sr.part.per_shard_device_bytes
+                                        + 4 * a.block_size)
+        try:
+            ServingFrontend(ga, device_budget_bytes=sr.device_bytes() - 1)
+            raise SystemExit("over-budget construction not rejected")
+        except ValueError as e:
+            assert "budget" in str(e)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_verify_names_true_block_id():
+    """verify=True through the partitioned path: a corrupted payload word
+    raises BlockDigestError naming the TRUE global block id (digests are
+    checked shard-locally, before assembly)."""
+    out = _run("""
+        from repro.api.executors import ShardedExecutor
+        from repro.api.plan import QueryPlanner
+        from repro.core.decoder import BlockDigestError
+        import dataclasses
+        # corrupt one word inside a known block's payload
+        bad = a.n_blocks // 2
+        w_start = np.asarray(a.word_off, np.int64).min(axis=1)
+        words = np.array(a.words)
+        words[int(w_start[bad])] ^= 0x5A5A
+        a2 = dataclasses.replace(a, words=words)
+        s2 = CompressedResidentStore(a2, backend="ref")
+        sx = ShardedExecutor(s2, mesh, verify=True)
+        assert sx.residency == "partition"
+        planner = QueryPlanner(s2)
+        plan = planner.plan_spans(np.array([0]), np.array([len(data)]))
+        try:
+            sx.run(plan)
+            raise SystemExit("corruption not detected")
+        except BlockDigestError as e:
+            assert f"block {bad} " in str(e), str(e)
+        print("OK")
+    """)
+    assert "OK" in out
