@@ -1,0 +1,137 @@
+"""End-to-end training throughput: sync fetch vs async prefetch data plane.
+
+The acceptance rows for the data-plane redesign: same archive, same
+sampler seed, same model — the ONLY differences on the prefetch row are
+(a) batch windows decode on the background worker through ONE coalesced
+DecodePlan per `lax.scan` window while the previous dispatch runs, and
+(b) U train steps ride one jit dispatch with donated state. The loss
+trajectories are asserted bit-identical before either row is reported,
+so any speedup is pure pipeline overlap + dispatch amortization, never
+numerics drift.
+
+On this single-core CPU container the win comes mostly from the
+coalesced window decode (one covering-block plan instead of U, blocks
+dedup ACROSS the window's batches) and the removed per-step dispatch —
+true compute/decode overlap is limited by the GIL on one core, which
+also makes single runs noisy; both loops report best-of-N like every
+other table (time_fn idiom). A real accelerator widens the gap because
+the worker decodes while the device is busy.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.api.archive import GenomicArchive
+from repro.configs import get_config
+from repro.data.fastq import make_fastq
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (init_train_state, make_train_step,
+                                       make_unrolled_train_step)
+
+BATCH = 8
+SEQ = 64
+UNROLL = 8
+DEPTH = 2
+BLOCK = 32 * 1024
+REPEATS = 3
+
+
+def _tiny_model():
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab=512)
+    return build_model(cfg)
+
+
+def _reset(model, opt, ds):
+    ds.load_state_dict({"step": 0, "seed": 0})
+    return init_train_state(model, jax.random.key(0), opt)
+
+
+def _run_sync(model, opt, ga, steps):
+    """One jit call per step, batch fetched synchronously in the gap."""
+    ds = ga.dataset(batch_size=BATCH, seq_len=SEQ, prefetch=0, seed=0)
+    step = jax.jit(make_train_step(model, opt, remat="none"))
+    state = init_train_state(model, jax.random.key(0), opt)
+    state, _ = step(state, next(iter(ds)))    # compile outside the timer
+    best, losses = float("inf"), None
+    for _ in range(REPEATS):
+        state = _reset(model, opt, ds)
+        it = iter(ds)
+        got = []
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step(state, next(it))
+            got.append(m["loss"])
+        jax.block_until_ready(state)
+        best = min(best, time.perf_counter() - t0)
+        losses = np.asarray([np.asarray(x) for x in got])
+    ds.close()
+    return best, losses
+
+
+def _run_prefetch(model, opt, ga, steps):
+    """(U, B, T) windows prefetched on the worker, scan-unrolled step."""
+    ds = ga.dataset(batch_size=BATCH, seq_len=SEQ, prefetch=DEPTH, seed=0)
+    step = make_unrolled_train_step(model, opt, remat="none")
+    state = init_train_state(model, jax.random.key(0), opt)
+    warm = {k: jnp.zeros((UNROLL, BATCH, SEQ), jnp.int32)
+            for k in ("tokens", "labels")}
+    state, _ = step(state, warm)              # compile outside the timer
+    # warm the window-decode path too (plan lowering + kernel jit for the
+    # coalesced (U*B)-id shape); window_at is pure, no stream state moves
+    jax.block_until_ready(ds.window_at(0, UNROLL))
+    best, losses, stats = float("inf"), None, {}
+    for _ in range(REPEATS):
+        state = _reset(model, opt, ds)
+        stream = ds.windows(UNROLL)
+        got = []
+        t0 = time.perf_counter()
+        for _ in range(steps // UNROLL):
+            state, ms = step(state, next(stream))
+            got.append(ms["loss"])
+        jax.block_until_ready(state)
+        best = min(best, time.perf_counter() - t0)
+        losses = np.concatenate([np.asarray(x) for x in got])
+        stats = ds.prefetch_stats()
+    ds.close()
+    return best, losses, stats
+
+
+def main(small: bool = False):
+    steps = 16 if small else 48
+    steps -= steps % UNROLL
+    model = _tiny_model()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    corpus = make_fastq("platinum", n_reads=1000 if small else 3000, seed=0)
+    ga = GenomicArchive.from_records(corpus, record_bytes=SEQ + 1,
+                                     block_size=BLOCK)
+
+    t_sync, loss_sync = _run_sync(model, opt, ga, steps)
+    t_pre, loss_pre, stats = _run_prefetch(model, opt, ga, steps)
+
+    # same sampler seed + scan-is-bit-identical ⇒ byte-equal trajectories;
+    # the rows are only comparable because this holds
+    np.testing.assert_array_equal(loss_sync, loss_pre)
+
+    tok = BATCH * SEQ
+    speedup = t_sync / t_pre
+    row(f"train/tokens_per_s_sync_B{BATCH}xT{SEQ}", t_sync / steps,
+        f"{tok * steps / t_sync:.0f}tok/s(cpu);unroll=1;prefetch=0")
+    row(f"train/tokens_per_s_prefetch_B{BATCH}xT{SEQ}", t_pre / steps,
+        f"{tok * steps / t_pre:.0f}tok/s(cpu);unroll={UNROLL};"
+        f"depth={DEPTH};speedup={speedup:.2f}x;"
+        f"stalls={stats.get('stalls', 0)};loss_bitexact=1")
+    if speedup < 1.2:
+        print(f"# WARNING: prefetch speedup {speedup:.2f}x below the "
+              f"1.2x acceptance target on this run")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,6 +64,8 @@ _TABLES = [
     ("blocksize", "benchmarks.bench_blocksize", "§2.1: block-size sweep"),
     ("tune", "benchmarks.bench_tune",
      "autotuner: encode-knob sweep cost + Pareto frontier"),
+    ("train", "benchmarks.bench_train",
+     "training data plane: sync vs async-prefetch tokens/s"),
 ]
 
 

@@ -1,8 +1,12 @@
 """Elastic restart demo: train, kill, restore onto a DIFFERENT device count.
 
-Simulates losing half the fleet: a checkpoint written under one sharding is
-restored under another (elastic_reshard), the data-pipeline sampler replays
-to the restored step, and training resumes with bit-identical batches.
+Simulates losing half the fleet MID-PREFETCH: a checkpoint written under
+one sharding is restored under another (elastic_reshard), and the
+dataset's `state_dict()` — sampler config + next-consume step, captured
+through the `ArchiveDataset` surface while batches were still in flight
+on the prefetch worker — replays the token stream bit-identically on the
+new mesh: in-flight batches are recomputed from the pure sampler, never
+persisted.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python examples/elastic_restart.py
@@ -18,7 +22,7 @@ from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
 from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.data.fastq import make_fastq
-from repro.data.pipeline import CompressedResidentDataLoader, PipelineConfig
+from repro.api.archive import GenomicArchive
 from repro.distributed.fault_tolerance import elastic_reshard
 from repro.models.registry import build_model
 from repro.training.optimizer import AdamWConfig
@@ -32,18 +36,26 @@ def main():
     model = build_model(cfg)
     opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
     state = init_train_state(model, jax.random.key(0), opt)
-    dl = CompressedResidentDataLoader(
-        make_fastq("platinum", n_reads=2000, seed=0),
-        PipelineConfig(seq_len=64, batch_size=8, block_size=4096))
+    ga = GenomicArchive.from_records(
+        make_fastq("platinum", n_reads=2000, seed=0), record_bytes=65,
+        block_size=4096)
+    ds = ga.dataset(batch_size=8, seq_len=64, prefetch=2)
     step = jax.jit(make_train_step(model, opt, remat="none"))
 
     with tempfile.TemporaryDirectory() as d:
         ck = Checkpointer(CheckpointConfig(directory=d))
-        it = iter(dl)
+        it = iter(ds)
         for i in range(10):
             state, m = step(state, next(it))
-        ck.save(10, state, extra={"loader": dl.state_dict(), "step": 10})
-        print(f"step 10 loss={float(m['loss']):.4f} — 'pod failure' now")
+        # checkpoint through the dataset surface while the prefetch
+        # worker still holds undelivered batches — exactly the state a
+        # dying pod would capture
+        ck.save(10, state, extra={"loader": ds.state_dict(), "step": 10})
+        print(f"step 10 loss={float(m['loss']):.4f} "
+              f"(in-flight {ds.state_dict().get('in_flight', 0)}) — "
+              f"'pod failure' now")
+        expect = [np.asarray(next(it)["tokens"]) for _ in range(3)]
+        ds.close()
 
         # --- restart on a smaller mesh: half the devices ---
         half = max(1, n // 2)
@@ -52,14 +64,21 @@ def main():
                      for k in state["params"]}
         restored = elastic_reshard(ck, shardings)
         manifest = restored.pop("_manifest")
-        dl.load_state_dict(manifest["extra"]["loader"])
+        # a FRESH dataset (new process, new mesh) restores the stream
+        ds2 = ga.dataset(batch_size=8, seq_len=64, prefetch=2)
+        ds2.load_state_dict(manifest["extra"]["loader"])
         print(f"restored step {manifest['extra']['step']} onto {half} "
               f"device(s); payload ratio "
               f"{manifest.get('payload_ratio', 1):.2f}x")
 
-        it = iter(dl)
+        it2 = iter(ds2)
+        replay = [np.asarray(next(it2)["tokens"]) for _ in range(3)]
+        for a, b in zip(expect, replay):
+            np.testing.assert_array_equal(a, b)
+        print("post-restore batch stream bit-identical across the reshard")
         for i in range(5):
-            restored, m = step(restored, next(it))
+            restored, m = step(restored, next(it2))
+        ds2.close()
         print(f"resumed; step 15 loss={float(m['loss']):.4f}")
 
 

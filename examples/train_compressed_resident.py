@@ -1,11 +1,14 @@
 """End-to-end training driver: LM trained on a compressed-resident corpus.
 
 Every batch is fetched by random-access decode from the device-resident
-archive (the paper's §4 random access driving the input pipeline), with
-compressed checkpoints + failure recovery.
+archive (the paper's §4 random access driving the input pipeline) through
+the `GenomicArchive.dataset(...)` data plane: async prefetch decodes
+batch k+1 while step k runs, `--unroll` feeds (U, B, T) windows — one
+DecodePlan per window — to a `lax.scan`-unrolled donated train step, and
+checkpoints capture the dataset's stream position for bit-exact resume.
 
     PYTHONPATH=src python examples/train_compressed_resident.py \
-        --arch qwen2-1.5b --steps 200 --reduced
+        --arch qwen2-1.5b --steps 200 --reduced --prefetch 2 --unroll 4
 """
 import argparse
 import tempfile
@@ -15,11 +18,12 @@ import jax
 from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
 from repro.configs import get_config
 from repro.data.fastq import make_fastq
-from repro.data.pipeline import CompressedResidentDataLoader, PipelineConfig
+from repro.api.archive import GenomicArchive
 from repro.distributed.fault_tolerance import run_resilient_training
 from repro.models.registry import build_model
 from repro.training.optimizer import AdamWConfig
-from repro.training.train_step import init_train_state, make_train_step
+from repro.training.train_step import (init_train_state, make_train_step,
+                                       make_unrolled_train_step)
 
 
 def main():
@@ -28,6 +32,8 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--unroll", type=int, default=1)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -39,22 +45,36 @@ def main():
     print(f"arch={args.arch} reduced={args.reduced} family={cfg.family}")
 
     corpus = make_fastq("platinum", n_reads=4000, seed=0)
-    dl = CompressedResidentDataLoader(
-        corpus, PipelineConfig(seq_len=args.seq, batch_size=args.batch,
-                               block_size=16 * 1024))
-    print(dl.compression_summary())
+    ga = GenomicArchive.from_records(corpus, record_bytes=args.seq + 1,
+                                     block_size=16 * 1024)
+    ds = ga.dataset(batch_size=args.batch, seq_len=args.seq,
+                    prefetch=args.prefetch)
+    st = ga.stats()
+    print(f"corpus {st.raw_size} B raw -> {st.compressed_device_bytes} B "
+          f"device-resident "
+          f"({st.raw_size / max(1, st.compressed_device_bytes):.2f}x); "
+          f"{ds!r}")
 
     opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
     state = init_train_state(model, jax.random.key(0), opt)
-    step = jax.jit(make_train_step(model, opt))
+    unroll = max(1, args.unroll)
+    if unroll > 1:
+        step = make_unrolled_train_step(model, opt, remat="none")
+        make_stream = lambda: ds.windows(unroll)       # noqa: E731
+    else:
+        step = jax.jit(make_train_step(model, opt))
+        make_stream = None
 
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="aceapex_ckpt_")
     ck = Checkpointer(CheckpointConfig(directory=ckpt_dir))
-    state = run_resilient_training(step, state, iter(dl), ck,
+    state = run_resilient_training(step, state, None, ck,
                                    n_steps=args.steps, ckpt_every=50,
-                                   loader=dl, log_every=10)
+                                   loader=ds, log_every=10,
+                                   steps_per_batch=unroll,
+                                   make_stream=make_stream)
     print(f"done; checkpoints in {ckpt_dir} "
-          f"(latest step {ck.latest_step()})")
+          f"(latest step {ck.latest_step()}); "
+          f"prefetch {ds.prefetch_stats()}")
 
 
 if __name__ == "__main__":

@@ -106,9 +106,24 @@ def shard_tag(name: str, derived: str) -> str:
     return f" [{';'.join(tags)}]" if tags else ""
 
 
+def train_tag(name: str, derived: str) -> str:
+    """`train/*` rows carry the data-plane outcome (prefetch-vs-sync
+    speedup, producer stalls, the loss-trajectory bit-identity flag) in
+    their derived field; surface it next to the timing so a data-plane
+    regression shows up as the pipeline property it breaks (speedup
+    collapsing, stalls appearing, identity lost), not just as
+    microseconds."""
+    if not name.startswith("train/"):
+        return ""
+    tags = [part for part in derived.split(";")
+            if part.startswith(("speedup=", "stalls=", "loss_bitexact=",
+                                "unroll=", "depth="))]
+    return f" [{';'.join(tags)}]" if tags else ""
+
+
 def row_tag(name: str, derived: str) -> str:
     return (depth_tag(name, derived) or serve_tag(name, derived)
-            or shard_tag(name, derived))
+            or shard_tag(name, derived) or train_tag(name, derived))
 
 
 def merge(out_path: str, in_paths: list) -> int:
@@ -278,6 +293,9 @@ def main() -> int:
         tag = shard_tag(name, cur_derived.get(name, ""))
         if tag:
             print(f"  shard    {name}: {cur[name]:.1f}us{tag}")
+        tag = train_tag(name, cur_derived.get(name, ""))
+        if tag:
+            print(f"  train    {name}: {cur[name]:.1f}us{tag}")
     for line in informational:
         print(f"  jitter   {line}")
     for line in improved:

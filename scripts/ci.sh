@@ -39,6 +39,16 @@ if [ "$TESTS" = 1 ]; then
   else
     python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
   fi
+  # end-to-end train smoke (fast tier too): tiny model, 4 steps through
+  # the full launcher — encode once + save the archive, async prefetch
+  # on, scan-unrolled windows, checkpoint written. Exercises the whole
+  # compressed-resident data plane the way a user invokes it.
+  TRAIN_TMP=$(mktemp -d)
+  python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 4 \
+    --batch 2 --seq 32 --reads 300 --block 4096 --prefetch 2 --unroll 2 \
+    --archive "$TRAIN_TMP/corpus.acegad" --ckpt-every 4 \
+    --ckpt-dir "$TRAIN_TMP/ckpt"
+  rm -rf "$TRAIN_TMP"
 fi
 
 if [ "$BENCH" = 1 ]; then
@@ -92,9 +102,11 @@ EOF
   # bench_compare prints each ra/* row's recorded max_depth and bucket
   # histogram next to its time.
   # (sharded joins the smoke set report-only: shard/* rows carry the
-  # per-shard resident bytes bench_compare prints next to each row)
+  # per-shard resident bytes bench_compare prints next to each row;
+  # train/* rows assert a bit-identical loss trajectory sync-vs-prefetch
+  # and carry the measured speedup in their derived field)
   python -m benchmarks.run --small \
-    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving,sharded \
+    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving,sharded,train \
     --json bench_current.json
   python scripts/bench_compare.py BENCH_baseline.json bench_current.json
 fi

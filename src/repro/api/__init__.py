@@ -15,6 +15,8 @@ from repro.api.archive import GenomicArchive
 from repro.api.cache import (BlockCache, EvictionPolicy, FrequencyPolicy,
                              FrequencySketch, LRUPolicy, PinRangePolicy,
                              TinyLFUPolicy)
+from repro.api.dataset import (ArchiveDataset, SequentialSampler,
+                               UniformSampler, make_sampler)
 from repro.api.executors import (ChunkStats, DeviceExecutor, ShardedExecutor,
                                  StreamingExecutor)
 from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
@@ -22,11 +24,12 @@ from repro.api.plan import (CachePlan, DecodePlan, QueryPlanner,
                             covering_blocks)
 
 __all__ = [
-    "Address", "BlockCache", "ByteRange", "CachePlan", "ChunkStats",
-    "DecodePlan", "DeviceExecutor", "EvictionPolicy", "FrequencyPolicy",
-    "FrequencySketch", "GenomicArchive", "LRUPolicy", "NameTable",
-    "PinRangePolicy", "QueryPlanner", "ReadId", "Region",
-    "ShardedExecutor", "StreamingExecutor", "TinyLFUPolicy",
-    "anchor_floor", "anchor_window_groups", "covering_blocks",
+    "Address", "ArchiveDataset", "BlockCache", "ByteRange", "CachePlan",
+    "ChunkStats", "DecodePlan", "DeviceExecutor", "EvictionPolicy",
+    "FrequencyPolicy", "FrequencySketch", "GenomicArchive", "LRUPolicy",
+    "NameTable", "PinRangePolicy", "QueryPlanner", "ReadId", "Region",
+    "SequentialSampler", "ShardedExecutor", "StreamingExecutor",
+    "TinyLFUPolicy", "UniformSampler", "anchor_floor",
+    "anchor_window_groups", "covering_blocks", "make_sampler",
     "normalize", "parse_region",
 ]

@@ -16,6 +16,7 @@ and every legacy entry point (`fetch_reads`, `decode_range`,
 """
 from __future__ import annotations
 
+import os
 from typing import Iterator, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -38,6 +39,7 @@ class GenomicArchive:
     def __init__(self, store, names: Optional[Sequence[bytes]] = None,
                  name_table: Optional[NameTable] = None):
         self.store = store
+        self._raw_names = [bytes(n) for n in names] if names else None
         if name_table is None and names is not None:
             name_table = NameTable.build(names)
         self.names = name_table
@@ -133,9 +135,94 @@ class GenomicArchive:
         ga.profile = profile
         return ga
 
+    # ------------------------------------------------------- persistence
+    _DISK_MAGIC = b"ACEGADS1"     # facade container: archive + index sidecar
+
+    def save(self, path: str) -> int:
+        """Persist the encoded archive + index metadata to one file so
+        later runs (e.g. `repro.launch.train --archive`) start from
+        compressed bytes on disk instead of re-encoding the corpus.
+        Returns bytes written. Layout: magic, u32 JSON-header length,
+        header (record geometry + record names), serialized archive."""
+        import json
+        import struct
+        from repro.core.format import serialize
+        hdr: dict = {}
+        index = self.store.index
+        if index is not None:
+            starts = index.starts.astype(np.int64)
+            lens = np.diff(starts)
+            if lens.size and bool((lens == lens[0]).all()) \
+                    and int(starts[0]) == 0:
+                hdr["record_bytes"] = int(lens[0])
+                hdr["n_records"] = int(lens.size)
+            else:
+                hdr["starts"] = [int(x) for x in starts]
+        if self._raw_names is not None:
+            hdr["names"] = [n.decode("latin-1") for n in self._raw_names]
+        head = json.dumps(hdr).encode()
+        payload = serialize(self.store.decoder.archive)
+        blob = self._DISK_MAGIC + struct.pack("<I", len(head)) + head \
+            + payload
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+        return len(blob)
+
+    @classmethod
+    def open(cls, path: str, backend: str = "auto", cache_blocks: int = 0,
+             cache_policy="lru") -> "GenomicArchive":
+        """Open an archive written by `save` — deserialize the compressed
+        payload, rebuild the read index/name table, ship to device. The
+        inverse of `save`; no encode work happens here."""
+        import json
+        import struct
+        from repro.core.format import deserialize
+        from repro.core.index import ReadIndex
+        from repro.core.residency import CompressedResidentStore
+        with open(path, "rb") as f:
+            blob = f.read()
+        if blob[:8] != cls._DISK_MAGIC:
+            raise ValueError(f"{path}: not a GenomicArchive.save file "
+                             f"(magic {blob[:8]!r})")
+        (hlen,) = struct.unpack_from("<I", blob, 8)
+        hdr = json.loads(blob[12:12 + hlen].decode())
+        archive = deserialize(blob[12 + hlen:])
+        index = None
+        if "record_bytes" in hdr:
+            index = ReadIndex.fixed_records(int(hdr["n_records"]),
+                                            int(hdr["record_bytes"]),
+                                            archive.block_size)
+        elif "starts" in hdr:
+            index = ReadIndex(
+                starts=np.asarray(hdr["starts"], np.uint64),
+                block_size=archive.block_size)
+        store = CompressedResidentStore(archive, index, backend=backend,
+                                        cache_blocks=cache_blocks,
+                                        cache_policy=cache_policy)
+        names = ([n.encode("latin-1") for n in hdr["names"]]
+                 if "names" in hdr else None)
+        return cls(store, names=names)
+
     # ------------------------------------------------------------- queries
     def plan(self, addrs: Sequence[Address]) -> DecodePlan:
         return self.planner.plan(addrs)
+
+    def dataset(self, batch_size: int = 8, seq_len: Optional[int] = None,
+                sampler="uniform", prefetch: int = 2, seed: int = 0,
+                **kwargs) -> "ArchiveDataset":
+        """Training data plane over this archive: an `ArchiveDataset`
+        owning sampling, batching, window coalescing, async prefetch, and
+        a checkpointable stream position — every batch lowers through the
+        query plane (DecodePlan → BlockCache → depth-bucketed launches).
+        `sampler` is "uniform" | "sequential" | a sampler instance;
+        `prefetch` is the bounded-queue depth (0 = synchronous). See
+        `repro.api.dataset.ArchiveDataset`."""
+        from repro.api.dataset import ArchiveDataset
+        return ArchiveDataset(self, batch_size=batch_size, seq_len=seq_len,
+                              sampler=sampler, prefetch=prefetch, seed=seed,
+                              **kwargs)
 
     def query(self, addrs: Sequence[Address], mode2: bool = True
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:

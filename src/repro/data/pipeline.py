@@ -1,22 +1,20 @@
-"""Compressed-resident training data pipeline (the paper's technique as the
-framework's input stage).
+"""Legacy loader shim — `CompressedResidentDataLoader` over `ArchiveDataset`.
 
-The tokenized corpus is ACEAPEX-compressed ONCE (host) and shipped to device
-compressed. Every training step:
-
-  sample record ids (host RNG, reproducible)  →  read→block index lookup
-  →  position-invariant block decode ON DEVICE  →  (B, seq_len) token batch
-
-i.e. random-shuffled batches without ever materializing the decompressed
-corpus — §4's read-level random access driving an input pipeline, bounded
-by §5's range-decode memory footprint. A double-buffer overlaps the next
-batch's decode with the current train step (dispatch is async in JAX, so
-issuing decode work early is the overlap mechanism).
+DEPRECATED surface: the training data plane now lives on the query plane
+as `GenomicArchive.dataset(...)` → `repro.api.dataset.ArchiveDataset`
+(sampling, batching, window coalescing, async prefetch, checkpointable
+stream position). This class remains as a thin compatibility shim the
+same way `fetch_reads`/`decode_range` shim the query plane: it builds
+the archive, delegates every batch to the dataset (ids lower through one
+`DecodePlan`, riding the `BlockCache` when enabled), and keeps the old
+`state_dict()` keys loadable. New code should call
+`GenomicArchive.dataset` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+import warnings
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -35,58 +33,76 @@ class PipelineConfig:
     cache_blocks: int = 0     # decoded-block cache capacity (0 = off);
                               # hot blocks skip re-decode across batches
     cache_policy: str = "lru"  # "lru" | "freq" | EvictionPolicy instance
+    prefetch: int = 0         # async prefetch depth (0 = synchronous —
+                              # the legacy behaviour; the new surface
+                              # defaults to 2)
 
 
 class CompressedResidentDataLoader:
-    """Infinite sampler of (tokens, labels) batches from a compressed-
-    resident byte corpus. Deterministic given (seed, step) — checkpointable
-    by storing the step (see checkpoint.Checkpointer)."""
+    """DEPRECATED shim over `ArchiveDataset` (see module docstring).
+
+    Infinite sampler of (tokens, labels) batches from a compressed-
+    resident byte corpus. Deterministic given (seed, step) — samplers are
+    pure functions of the step counter, so `state_dict()` restores are
+    O(1) and bit-exact at any prefetch depth."""
+
+    _warned = False
 
     def __init__(self, corpus: bytes, cfg: PipelineConfig,
                  backend: str = "auto"):
+        if not CompressedResidentDataLoader._warned:
+            CompressedResidentDataLoader._warned = True
+            warnings.warn(
+                "CompressedResidentDataLoader is a compatibility shim; "
+                "use GenomicArchive.dataset(...) (repro.api) instead",
+                DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         rec = cfg.seq_len + 1                     # +1 for shifted labels
         self.archive = GenomicArchive.from_records(
             corpus, record_bytes=rec, block_size=cfg.block_size,
             entropy=cfg.entropy, backend=backend,
             cache_blocks=cfg.cache_blocks, cache_policy=cfg.cache_policy)
+        self.dataset = self.archive.dataset(
+            batch_size=cfg.batch_size, seq_len=cfg.seq_len,
+            sampler="uniform", prefetch=cfg.prefetch, seed=cfg.seed)
         self.store = self.archive.store
         self.n_records = self.archive.n_reads
         self.record_bytes = rec
-        self._rng = np.random.default_rng(cfg.seed)
-        self.step = 0
+
+    @property
+    def step(self) -> int:
+        return self.dataset.step
 
     # --------------------------------------------------------------- state
     def state_dict(self) -> dict:
-        return {"step": self.step, "seed": self.cfg.seed}
+        return self.dataset.state_dict()
 
     def load_state_dict(self, st: dict) -> None:
-        self.cfg.seed = int(st["seed"])
-        self.step = int(st["step"])
-        self._rng = np.random.default_rng(self.cfg.seed)
-        # replay sampling stream to `step` (cheap: integers only)
-        for _ in range(self.step):
-            self._rng.integers(0, self.n_records, size=self.cfg.batch_size)
+        # accepts both the dataset payload and the legacy {"step","seed"}
+        self.dataset.load_state_dict(st)
+        self.cfg.seed = int(self.dataset.sampler.seed)
 
     # -------------------------------------------------------------- batches
     def next_ids(self) -> np.ndarray:
-        ids = self._rng.integers(0, self.n_records, size=self.cfg.batch_size)
-        self.step += 1
+        ids = self.dataset.sampler.sample(self.dataset.step)
+        self.dataset.step += 1
         return ids
 
     def fetch(self, ids: np.ndarray) -> dict:
-        # one facade query per batch: ids lower to a DecodePlan and decode
-        # through the same device pipeline as every other entry point
-        rows, _ = self.archive.query(np.asarray(ids, np.int64))
+        # one dataset fetch per batch: ids lower to a DecodePlan and decode
+        # through the same cache-riding device pipeline as every other
+        # entry point
+        rows = self.dataset.fetch_ids(np.asarray(ids, np.int64))
         toks = rows.astype(jnp.int32)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
     def __iter__(self) -> Iterator[dict]:
-        # double buffer: issue decode for batch k+1 before yielding batch k
-        nxt = self.fetch(self.next_ids())
-        while True:
-            cur, nxt = nxt, self.fetch(self.next_ids())
-            yield cur
+        # delegate: prefetched (cfg.prefetch > 0) or synchronous stream,
+        # resuming from the dataset's checkpointable step either way
+        return iter(self.dataset)
+
+    def close(self) -> None:
+        self.dataset.close()
 
     def compression_summary(self) -> str:
         st = self.store.stats()

@@ -50,10 +50,16 @@ class StragglerWatchdog:
         return is_straggler
 
 
+def _last_loss(metrics: Dict) -> float:
+    """Scalar loss for logging — scan-unrolled steps report a (U,) stack;
+    the window's last step is the comparable number."""
+    return float(np.asarray(metrics["loss"]).reshape(-1)[-1])
+
+
 def run_resilient_training(
     train_step: Callable,
     state: Dict,
-    batches,                       # iterator of batches
+    batches,                       # iterator of batches (None → make_stream)
     ckpt: Checkpointer,
     n_steps: int,
     start_step: int = 0,
@@ -63,15 +69,33 @@ def run_resilient_training(
     loader=None,
     log_every: int = 10,
     log: Callable = print,
+    steps_per_batch: int = 1,
+    make_stream: Optional[Callable[[], object]] = None,
 ) -> Dict:
     """Checkpoint/restart training driver. `fail_hook(step)` may raise to
     inject failures (tests); real deployments raise from collectives when a
     host dies. On failure: restore latest checkpoint (+ loader state),
-    rebuild the batch stream, continue."""
+    rebuild the batch stream, continue.
+
+    The loader is consumed strictly through the `ArchiveDataset` surface:
+    `state_dict()/load_state_dict()` for the restore point (sampler config
+    + next-consume step — in-flight prefetched batches are recomputed, so
+    restarts are bit-deterministic at any queue depth), `close()` to stop
+    a live prefetch worker before rebuilding the stream, and iteration to
+    resume it. `steps_per_batch > 1` declares a scan-unrolled step whose
+    batches are (U, B, T) windows (pass `make_stream=lambda:
+    loader.windows(U)` so rebuilt streams keep the window shape)."""
     watchdog = StragglerWatchdog()
+    if make_stream is None:
+        if loader is not None:
+            make_stream = lambda: iter(loader)         # noqa: E731
+        elif batches is not None:
+            make_stream = lambda: iter(batches)        # noqa: E731
+        else:
+            raise ValueError("need batches or loader/make_stream")
     restarts = 0
     step = start_step
-    it = iter(batches)
+    it = iter(batches) if batches is not None else make_stream()
     if ckpt.latest_step() is None:       # bootstrap restore point
         extra = {"loader": loader.state_dict()} if loader is not None else {}
         extra["step"] = step
@@ -88,11 +112,12 @@ def run_resilient_training(
             if watchdog.observe(dt):
                 log(f"[ft] step {step}: straggler ({dt:.3f}s vs "
                     f"EWMA {watchdog._ewma:.3f}s)")
-            step += 1
-            if step % log_every == 0:
-                log(f"step {step}: loss={float(metrics['loss']):.4f} "
+            prev = step
+            step += steps_per_batch
+            if step // log_every > prev // log_every:
+                log(f"step {step}: loss={_last_loss(metrics):.4f} "
                     f"({dt:.2f}s)")
-            if step % ckpt_every == 0 or step == n_steps:
+            if step // ckpt_every > prev // ckpt_every or step >= n_steps:
                 extra = ({"loader": loader.state_dict()}
                          if loader is not None else {})
                 extra["step"] = step
@@ -112,7 +137,9 @@ def run_resilient_training(
             step = int(manifest["extra"].get("step", manifest["step"]))
             if loader is not None and "loader" in manifest["extra"]:
                 loader.load_state_dict(manifest["extra"]["loader"])
-                it = iter(loader)
+                it = make_stream()
+    if loader is not None and hasattr(loader, "close"):
+        loader.close()                   # no prefetch worker outlives us
     return state
 
 

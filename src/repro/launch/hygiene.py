@@ -1,0 +1,107 @@
+"""Process hygiene for training launches (the olmax `run.sh` idiom,
+in-process).
+
+Production JAX launchers front-load three kinds of environment setup
+before the first backend touch:
+
+  * allocator — tcmalloc via LD_PRELOAD (needs a re-exec: the loader
+    reads LD_PRELOAD before Python runs) + a large-alloc report
+    threshold so multi-GB numpy buffers don't spam warnings;
+  * log noise — TF_CPP_MIN_LOG_LEVEL=4 silences the libtpu/TF chatter
+    that interleaves with step logs;
+  * XLA flags — appended to XLA_FLAGS, keyed by platform: flags like
+    `--xla_step_marker_location=1` (step markers at the outer while
+    loop) only parse on TPU builds; this container's CPU XLA aborts on
+    them, so the table is per-platform and never force-feeds a flag the
+    local build can't parse.
+
+Everything is idempotent and respectful of the caller's environment:
+a variable the user already set is never overwritten, a flag already in
+XLA_FLAGS is never duplicated. `apply_process_hygiene()` must run
+before the first jax backend touch (import is fine; device use is not).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List, Optional
+
+# env defaults applied only when unset (user environment wins)
+_ENV_DEFAULTS = {
+    # numpy/jax host buffers of multi-GB corpora are expected, not a leak
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+    # keep libtpu/TF runtime chatter out of the step logs
+    "TF_CPP_MIN_LOG_LEVEL": "4",
+}
+
+# XLA flags by platform. CPU gets none by default: this container's CPU
+# XLA aborts on TPU-scoped flags (verified: --xla_step_marker_location
+# is a hard abort), and the CPU-safe knobs are already defaults.
+_XLA_FLAGS: Dict[str, List[str]] = {
+    "tpu": [
+        "--xla_step_marker_location=1",   # step marker at the outer while
+    ],
+    "cpu": [],
+    "gpu": [],
+}
+
+_TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+)
+
+# sentinel so a re-exec'd child doesn't re-exec forever
+_REEXEC_GUARD = "REPRO_TCMALLOC_REEXECED"
+
+
+def find_tcmalloc() -> Optional[str]:
+    for p in _TCMALLOC_PATHS:
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def maybe_reexec_tcmalloc(enable: bool) -> bool:
+    """Re-exec the current process with tcmalloc LD_PRELOADed (the only
+    way to swap the allocator: the dynamic loader consumed LD_PRELOAD
+    before Python started). No-op (False) when disabled, already
+    preloaded, already re-exec'd, or the library isn't installed. Call
+    FIRST — before jax or any large allocation."""
+    if not enable or os.environ.get(_REEXEC_GUARD):
+        return False
+    lib = find_tcmalloc()
+    if lib is None or "tcmalloc" in os.environ.get("LD_PRELOAD", ""):
+        return False
+    env = dict(os.environ)
+    env["LD_PRELOAD"] = (lib + (" " + env["LD_PRELOAD"]
+                                if env.get("LD_PRELOAD") else ""))
+    env[_REEXEC_GUARD] = "1"
+    env.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                   _ENV_DEFAULTS["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"])
+    os.execve(sys.executable, [sys.executable] + sys.argv, env)
+    return True        # unreachable; keeps the signature honest
+
+
+def apply_process_hygiene(platform: Optional[str] = None,
+                          extra_xla_flags: Optional[List[str]] = None
+                          ) -> Dict[str, str]:
+    """Set the env defaults + platform-keyed XLA flags. Returns the
+    variables actually changed (empty when the environment already had
+    everything). `platform` defaults to JAX_PLATFORMS/JAX_PLATFORM_NAME
+    or "cpu"; pass "tpu"/"gpu" explicitly on real accelerator launches."""
+    changed: Dict[str, str] = {}
+    for k, v in _ENV_DEFAULTS.items():
+        if k not in os.environ:
+            os.environ[k] = v
+            changed[k] = v
+    if platform is None:
+        platform = (os.environ.get("JAX_PLATFORMS")
+                    or os.environ.get("JAX_PLATFORM_NAME") or "cpu")
+    platform = platform.split(",")[0].strip().lower() or "cpu"
+    want = list(_XLA_FLAGS.get(platform, [])) + list(extra_xla_flags or [])
+    have = os.environ.get("XLA_FLAGS", "")
+    add = [f for f in want if f.split("=")[0] not in have]
+    if add:
+        os.environ["XLA_FLAGS"] = (have + " " + " ".join(add)).strip()
+        changed["XLA_FLAGS"] = os.environ["XLA_FLAGS"]
+    return changed

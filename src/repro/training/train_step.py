@@ -1,9 +1,16 @@
 """Train-step factory: loss → grad → AdamW, jit/pjit-ready.
 
-Two variants:
+Three variants:
   make_train_step       — pure pjit/auto-SPMD (the dry-run path): gradients
                           sync through XLA-inserted reduce-scatter/all-reduce
                           derived from the param shardings.
+  make_unrolled_train_step — the same step `lax.scan`-unrolled over a
+                          (U, B, T) batch window with donated train state
+                          and window buffers: one dispatch per U steps,
+                          bit-identical losses to U per-step calls (pinned
+                          by tests). Pairs with `ArchiveDataset.windows(U)`,
+                          which decodes the whole window through ONE
+                          DecodePlan on the prefetch worker.
   make_manual_dp_step   — shard_map over the data axes with explicit psum,
                           optionally int8-compressed (grad_compress) — the
                           collective-payload A/B lever for §Perf.
@@ -41,6 +48,29 @@ def make_train_step(model, opt_cfg: AdamWConfig, remat: str = "full"
         return {"params": new_p, "opt": new_opt}, metrics
 
     return step
+
+
+def make_unrolled_train_step(model, opt_cfg: AdamWConfig,
+                             remat: str = "full",
+                             donate: bool = True) -> Callable:
+    """(state, window) → (state, metrics) where `window` stacks U batches
+    as {"tokens": (U, B, T), "labels": (U, B, T)} and metrics are stacked
+    (U,) per step. The scan body IS `make_train_step`'s step, so the loss
+    trajectory is bit-identical to running the steps one jit call at a
+    time — the unroll only removes U-1 host dispatches. The train state
+    is donated: params/opt buffers update in place across the scan
+    (the int token windows have no same-shape output to alias, so they
+    are NOT donatable — XLA would just warn and copy)."""
+    inner = make_train_step(model, opt_cfg, remat=remat)
+
+    def unrolled(state: Dict, window: Dict) -> Tuple[Dict, Dict]:
+        def body(st, batch):
+            st2, metrics = inner(st, batch)
+            return st2, metrics
+
+        return jax.lax.scan(body, state, window)
+
+    return jax.jit(unrolled, donate_argnums=(0,) if donate else ())
 
 
 def make_manual_dp_step(model, opt_cfg: AdamWConfig, mesh,

@@ -1,0 +1,330 @@
+"""Async compressed-resident data plane: prefetch determinism, restart,
+backpressure, shutdown, and the loader-API redesign (`ArchiveDataset` +
+legacy shim bit-identity across restart boundaries)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.archive import GenomicArchive
+from repro.api.dataset import SequentialSampler, UniformSampler
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+from repro.data.fastq import make_fastq
+from repro.data.pipeline import CompressedResidentDataLoader, PipelineConfig
+from repro.data.prefetch import (AsyncPrefetcher, PrefetchingLoader,
+                                 PrefetchWorkerError)
+from repro.distributed.fault_tolerance import run_resilient_training
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_fastq("platinum", n_reads=600, seed=7)
+
+
+@pytest.fixture(scope="module")
+def archive(corpus):
+    return GenomicArchive.from_records(corpus, record_bytes=33,
+                                       block_size=4096, backend="ref")
+
+
+def _take(ds, n):
+    it = iter(ds)
+    out = [np.asarray(next(it)["tokens"]) for _ in range(n)]
+    return out
+
+
+# ----------------------------------------------------------- determinism
+def test_sync_vs_prefetch_bit_identity_any_depth(archive):
+    """The delivered stream is a pure function of the step counter —
+    identical at every queue depth, including the synchronous path."""
+    ds = archive.dataset(batch_size=4, seq_len=32, prefetch=0, seed=3)
+    ref = _take(ds, 6)
+    ds.close()
+    for depth in (1, 2, 5):
+        d = archive.dataset(batch_size=4, seq_len=32, prefetch=depth, seed=3)
+        got = _take(d, 6)
+        d.close()
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_windows_stack_the_per_step_stream(archive):
+    """windows(n) = n per-step batches through ONE DecodePlan, stacked."""
+    ds = archive.dataset(batch_size=4, seq_len=32, prefetch=0, seed=1)
+    ref = _take(ds, 6)
+    ds.close()
+    dw = archive.dataset(batch_size=4, seq_len=32, prefetch=2, seed=1)
+    wit = dw.windows(3)
+    wins = [next(wit) for _ in range(2)]
+    dw.close()
+    got = [np.asarray(w["tokens"][i]) for w in wins for i in range(3)]
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    assert wins[0]["tokens"].shape == (3, 4, 32)
+
+
+def test_restart_mid_prefetch_determinism(archive):
+    """Checkpoint while the worker holds undelivered batches; restore
+    into the SAME dataset and into a FRESH one — both continue the
+    exact stream (in-flight work is recomputed, not persisted)."""
+    ds = archive.dataset(batch_size=4, seq_len=32, prefetch=3, seed=11)
+    it = iter(ds)
+    for _ in range(4):
+        next(it)
+    st = ds.state_dict()
+    assert st["step"] == 4
+    later = [np.asarray(next(it)["tokens"]) for _ in range(3)]
+
+    ds.load_state_dict(st)                      # same instance
+    for a, b in zip(later, _take(ds, 3)):
+        np.testing.assert_array_equal(a, b)
+    ds.close()
+
+    fresh = archive.dataset(batch_size=4, seq_len=32, prefetch=1, seed=0)
+    fresh.load_state_dict(st)                   # fresh instance, new depth
+    for a, b in zip(later, _take(fresh, 3)):
+        np.testing.assert_array_equal(a, b)
+    fresh.close()
+
+
+def test_state_dict_survives_json_and_legacy_payload(archive):
+    import json
+    ds = archive.dataset(batch_size=2, seq_len=32, prefetch=2, seed=5)
+    ref = _take(ds, 3)
+    st = json.loads(json.dumps(ds.state_dict()))   # checkpoint manifest trip
+    ds.close()
+    d2 = archive.dataset(batch_size=2, seq_len=32, prefetch=0)
+    d2.load_state_dict(st)
+    assert d2.step == 3 and d2.sampler.seed == 5
+    # legacy {"step","seed"} payloads (pre-redesign checkpoints) restore
+    d3 = archive.dataset(batch_size=2, seq_len=32, prefetch=0)
+    d3.load_state_dict({"step": 0, "seed": 5})
+    for a, b in zip(ref, _take(d3, 3)):
+        np.testing.assert_array_equal(a, b)
+    d3.close()
+
+
+def test_sequential_sampler_epochs(archive):
+    ds = archive.dataset(batch_size=4, seq_len=32, sampler="sequential",
+                         prefetch=0)
+    ids0 = ds.sampler.sample(0)
+    np.testing.assert_array_equal(ids0, np.arange(4))
+    wrap = ds.sampler.sample(ds.n_records)   # wraps, never out of range
+    assert (wrap < ds.n_records).all()
+    assert isinstance(ds.sampler, SequentialSampler)
+
+
+# ---------------------------------------------------------- backpressure
+def test_bounded_queue_backpressure():
+    """A fast producer never runs more than depth+1 items ahead of a slow
+    consumer (depth queued + one awaiting put) and records its stalls."""
+    depth = 2
+    pf = AsyncPrefetcher(lambda s: s * s, depth=depth)
+    got = []
+    for i in range(8):
+        time.sleep(0.02)                     # slow consumer
+        step, item = pf.get(timeout=5)
+        got.append((step, item))
+        assert pf.produced - pf.consumed <= depth + 1
+    pf.stop()
+    assert got == [(i, i * i) for i in range(8)]
+    assert pf.max_ahead <= depth + 1
+    assert pf.stalls > 0                     # the bound actually bound
+
+
+def test_prefetch_stride():
+    pf = AsyncPrefetcher(lambda s: s, start_step=10, depth=2, stride=4)
+    steps = [pf.get(timeout=5)[0] for _ in range(3)]
+    pf.stop()
+    assert steps == [10, 14, 18]
+
+
+# -------------------------------------------------------------- shutdown
+def test_shutdown_without_leaked_workers(archive):
+    n0 = threading.active_count()
+    ds = archive.dataset(batch_size=2, seq_len=32, prefetch=2)
+    it = iter(ds)
+    next(it)
+    assert threading.active_count() > n0     # worker actually running
+    ds.close()
+    assert threading.active_count() == n0
+    ds.close()                               # idempotent
+    # dropping the iterator (GC) also reaps the worker, via the
+    # generator's finally — no explicit close required
+    it_b = iter(ds)
+    next(it_b)
+    assert threading.active_count() > n0
+    del it_b
+    assert threading.active_count() == n0
+    # a new iterator replaces (and stops) the previous worker
+    it1 = iter(ds)
+    next(it1)
+    it2 = iter(ds)
+    next(it2)
+    assert threading.active_count() == n0 + 1
+    ds.close()
+    assert threading.active_count() == n0
+
+
+def test_shutdown_unblocks_stalled_producer():
+    pf = AsyncPrefetcher(lambda s: s, depth=1)
+    time.sleep(0.1)                          # producer now stuck on put
+    assert pf.alive
+    pf.stop()
+    assert not pf.alive
+
+
+def test_context_managers():
+    n0 = threading.active_count()
+    with PrefetchingLoader(lambda s: s, depth=2) as pl:
+        assert next(pl) == 0 and next(pl) == 1
+    assert threading.active_count() == n0
+
+
+def test_worker_exception_propagates():
+    def boom(step):
+        if step == 2:
+            raise ValueError("bad decode")
+        return step
+
+    pl = PrefetchingLoader(boom, depth=2)
+    assert next(pl) == 0 and next(pl) == 1
+    with pytest.raises(PrefetchWorkerError, match="bad decode"):
+        for _ in range(4):
+            next(pl)
+    pl.close()
+
+
+# ------------------------------------------------- legacy shim redesign
+def test_legacy_shim_is_a_dataset_shim(corpus, archive):
+    """Shim and `GenomicArchive.dataset` produce the same stream, and a
+    checkpoint taken through either surface restores onto the other —
+    bit-identity across the restart boundary in both directions."""
+    dl = CompressedResidentDataLoader(
+        corpus, PipelineConfig(seq_len=32, batch_size=4, block_size=4096,
+                               seed=3), backend="ref")
+    ds = archive.dataset(batch_size=4, seq_len=32, prefetch=0, seed=3)
+    it_dl, it_ds = iter(dl), iter(ds)
+    for _ in range(4):
+        np.testing.assert_array_equal(np.asarray(next(it_dl)["tokens"]),
+                                      np.asarray(next(it_ds)["tokens"]))
+    # shim checkpoint → new-surface restore
+    st = dl.state_dict()
+    cont_dl = [np.asarray(next(it_dl)["tokens"]) for _ in range(3)]
+    d2 = archive.dataset(batch_size=4, seq_len=32, prefetch=2)
+    d2.load_state_dict(st)
+    for a, b in zip(cont_dl, _take(d2, 3)):
+        np.testing.assert_array_equal(a, b)
+    # new-surface checkpoint → shim restore
+    st2 = d2.state_dict()
+    cont_ds = _take(d2, 2)
+    d2.close()
+    dl.load_state_dict(st2)
+    it3 = iter(dl)
+    for a in cont_ds:
+        np.testing.assert_array_equal(a, np.asarray(next(it3)["tokens"]))
+    dl.close()
+
+
+def test_shim_fetch_rides_query_plane_and_cache(corpus):
+    """The shim's fetch() lowers through DecodePlan and the BlockCache —
+    repeated batches must report cache hits."""
+    dl = CompressedResidentDataLoader(
+        corpus, PipelineConfig(seq_len=32, batch_size=4, block_size=4096,
+                               cache_blocks=8), backend="ref")
+    ids = np.arange(4)
+    a = dl.fetch(ids)
+    b = dl.fetch(ids)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    info = dl.archive.cache_info()
+    assert info["hits"] > 0
+    dl.close()
+
+
+# ------------------------------------------------------- archive on disk
+def test_archive_save_open_roundtrip(tmp_path, corpus, archive):
+    p = str(tmp_path / "corpus.acegad")
+    archive.save(p)
+    ga2 = GenomicArchive.open(p, backend="ref")
+    ds1 = archive.dataset(batch_size=4, seq_len=32, prefetch=0, seed=2)
+    ds2 = ga2.dataset(batch_size=4, seq_len=32, prefetch=0, seed=2)
+    for a, b in zip(_take(ds1, 3), _take(ds2, 3)):
+        np.testing.assert_array_equal(a, b)
+    # FASTQ archive (irregular records + names) round-trips too
+    ga3 = GenomicArchive.from_bytes(corpus, block_size=4096, backend="ref")
+    p2 = str(tmp_path / "named.acegad")
+    ga3.save(p2)
+    ga4 = GenomicArchive.open(p2, backend="ref")
+    np.testing.assert_array_equal(ga3[5], ga4[5])
+    name = ga3._raw_names[9].decode()
+    np.testing.assert_array_equal(ga3[name], ga4[name])
+
+
+def test_open_rejects_garbage(tmp_path):
+    p = str(tmp_path / "junk.bin")
+    with open(p, "wb") as f:
+        f.write(b"NOTANARCHIVE" * 4)
+    with pytest.raises(ValueError, match="magic"):
+        GenomicArchive.open(p)
+
+
+# ------------------------------------- fault tolerance on the new surface
+def test_resilient_training_restarts_prefetched_stream(tmp_path, archive):
+    """Injected failure mid-run with an active prefetch worker: restore
+    through the dataset surface, resume, and land on a bit-identical
+    final accumulator vs the clean run."""
+
+    def accum_step(state, batch):
+        acc = state["acc"] + jnp.sum(batch["tokens"].astype(jnp.int32))
+        return {"acc": acc}, {"loss": acc.astype(jnp.float32)}
+
+    def run(ckdir, fail_hook=None):
+        ds = archive.dataset(batch_size=4, seq_len=32, prefetch=2, seed=13)
+        ck = Checkpointer(CheckpointConfig(directory=str(ckdir)))
+        state = {"acc": jnp.zeros((), jnp.int32)}
+        out = run_resilient_training(
+            accum_step, state, None, ck, n_steps=10, ckpt_every=4,
+            fail_hook=fail_hook, loader=ds, log=lambda *a: None)
+        assert not ds.prefetch_stats()["alive"]   # loop closed the worker
+        return int(out["acc"])
+
+    clean = run(tmp_path / "clean")
+    fails = {"n": 0}
+
+    def fail_once(step):
+        if step == 6 and fails["n"] < 1:
+            fails["n"] += 1
+            raise RuntimeError("injected mid-prefetch")
+
+    recovered = run(tmp_path / "failing", fail_hook=fail_once)
+    assert fails["n"] == 1
+    assert recovered == clean
+
+
+def test_resilient_training_unrolled_windows(tmp_path, archive):
+    """steps_per_batch + make_stream: the window stream checkpoints on
+    window boundaries and the step accounting stays exact."""
+
+    def accum_step(state, window):
+        acc = state["acc"] + jnp.sum(window["tokens"].astype(jnp.int32))
+        return {"acc": acc}, {"loss": jnp.full((2,), acc, jnp.float32)}
+
+    ds = archive.dataset(batch_size=4, seq_len=32, prefetch=2, seed=13)
+    ck = Checkpointer(CheckpointConfig(directory=str(tmp_path)))
+    out = run_resilient_training(
+        accum_step, {"acc": jnp.zeros((), jnp.int32)}, None, ck,
+        n_steps=10, ckpt_every=4, loader=ds, steps_per_batch=2,
+        make_stream=lambda: ds.windows(2), log=lambda *a: None)
+    assert ck.latest_step() == 10
+
+    # same token mass as the per-step clean run over 10 steps
+    ds2 = archive.dataset(batch_size=4, seq_len=32, prefetch=0, seed=13)
+    total = sum(int(np.asarray(b["tokens"], np.int64).sum())
+                for _, b in zip(range(10), ds2))
+    ds2.close()
+    assert int(out["acc"]) == total

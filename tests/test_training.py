@@ -11,7 +11,8 @@ from repro.models.registry import build_model
 from repro.training import grad_compress as gc
 from repro.training.optimizer import (AdamWConfig, adamw_update,
                                       global_norm, init_opt_state, lr_at)
-from repro.training.train_step import init_train_state, make_train_step
+from repro.training.train_step import (init_train_state, make_train_step,
+                                       make_unrolled_train_step)
 
 
 def test_lr_schedule():
@@ -59,6 +60,45 @@ def test_loss_decreases_on_real_pipeline():
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_unrolled_step_matches_per_step_losses():
+    """lax.scan unroll is a dispatch optimization, not a numerics change:
+    the loss trajectory and final params must be BIT-identical to calling
+    the jit step once per batch."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=30)
+    corpus = make_fastq("platinum", n_reads=400, seed=3)
+    dl = CompressedResidentDataLoader(
+        corpus, PipelineConfig(seq_len=32, batch_size=2, block_size=4096),
+        backend="ref")
+    batches = [next(iter_b) for iter_b in [iter(dl)] for _ in range(6)]
+    dl.close()
+
+    # reference: one jit call per step
+    state_a = init_train_state(model, jax.random.key(0), opt)
+    step = jax.jit(make_train_step(model, opt, remat="none"))
+    ref_losses = []
+    for b in batches:
+        state_a, m = step(state_a, b)
+        ref_losses.append(np.asarray(m["loss"]))
+
+    # unrolled: two scan dispatches of 3 steps each (donated state)
+    state_b = init_train_state(model, jax.random.key(0), opt)
+    unrolled = make_unrolled_train_step(model, opt, remat="none")
+    got_losses = []
+    for lo in (0, 3):
+        window = {k: jnp.stack([b[k] for b in batches[lo:lo + 3]])
+                  for k in batches[0]}
+        state_b, ms = unrolled(state_b, window)
+        got_losses.extend(np.asarray(ms["loss"]))
+
+    np.testing.assert_array_equal(np.asarray(ref_losses),
+                                  np.asarray(got_losses))
+    for k in state_a["params"]:
+        np.testing.assert_array_equal(np.asarray(state_a["params"][k]),
+                                      np.asarray(state_b["params"][k]))
 
 
 def test_int8_quantize_roundtrip():
