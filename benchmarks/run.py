@@ -66,6 +66,8 @@ _TABLES = [
      "autotuner: encode-knob sweep cost + Pareto frontier"),
     ("train", "benchmarks.bench_train",
      "training data plane: sync vs async-prefetch tokens/s"),
+    ("resilience", "benchmarks.bench_resilience",
+     "robustness: parity recovery latency + storage cost"),
 ]
 
 

@@ -121,9 +121,25 @@ def train_tag(name: str, derived: str) -> str:
     return f" [{';'.join(tags)}]" if tags else ""
 
 
+def resil_tag(name: str, derived: str) -> str:
+    """`resil/*` rows carry the recovery outcome (blocks parity-
+    reconstructed, decode retries, quarantined count, parity group /
+    storage overhead) in their derived field; surface it next to the
+    timing so a recovery regression shows up as the counter it breaks
+    (reconstruction stopping, quarantines appearing, parity cost
+    growing), not just as microseconds."""
+    if not name.startswith("resil/"):
+        return ""
+    tags = [part for part in derived.split(";")
+            if part.startswith(("reconstructed=", "retries=",
+                                "quarantined=", "parity=", "overhead="))]
+    return f" [{';'.join(tags)}]" if tags else ""
+
+
 def row_tag(name: str, derived: str) -> str:
     return (depth_tag(name, derived) or serve_tag(name, derived)
-            or shard_tag(name, derived) or train_tag(name, derived))
+            or shard_tag(name, derived) or train_tag(name, derived)
+            or resil_tag(name, derived))
 
 
 def merge(out_path: str, in_paths: list) -> int:
@@ -296,6 +312,9 @@ def main() -> int:
         tag = train_tag(name, cur_derived.get(name, ""))
         if tag:
             print(f"  train    {name}: {cur[name]:.1f}us{tag}")
+        tag = resil_tag(name, cur_derived.get(name, ""))
+        if tag:
+            print(f"  resil    {name}: {cur[name]:.1f}us{tag}")
     for line in informational:
         print(f"  jitter   {line}")
     for line in improved:

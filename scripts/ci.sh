@@ -55,6 +55,13 @@ if [ "$BENCH" = 1 ]; then
   # serving-plane smoke: one closed loop through ServingFrontend with a
   # bit-identity spot check on every request (asserts 0 deadline misses)
   python -m repro.serving.traffic --smoke
+  # chaos smoke: every fault scenario (payload flips, double-corruption
+  # partial serving, transient launches, prefetch-worker crash, shard
+  # loss on 8 forced host devices) through the full detect → recover →
+  # degrade loop; output must be bit-perfect or a typed error — the
+  # harness exits nonzero on the first silently-wrong byte
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.resilience.chaos --smoke
   # sharded smoke: mesh-partitioned residency on 8 forced host devices —
   # partitioned decode bit-identical to the raw corpus, then a cached
   # re-read through the per-shard block cache must report hits (the flag
@@ -104,9 +111,12 @@ EOF
   # (sharded joins the smoke set report-only: shard/* rows carry the
   # per-shard resident bytes bench_compare prints next to each row;
   # train/* rows assert a bit-identical loss trajectory sync-vs-prefetch
-  # and carry the measured speedup in their derived field)
+  # and carry the measured speedup in their derived field;
+  # resil/* rows are report-only: parity storage cost and one-block
+  # parity-reconstruction latency, with the reconstructed/quarantined
+  # counters printed next to each row)
   python -m benchmarks.run --small \
-    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving,sharded,train \
+    --only index,fetch_batch,query,blocksize,cache,random_access,tune,serving,sharded,train,resilience \
     --json bench_current.json
   python scripts/bench_compare.py BENCH_baseline.json bench_current.json
 fi

@@ -52,6 +52,8 @@ class GenomicArchive:
                    mode: str = "ra", entropy: str = "rans",
                    backend: str = "auto", cache_blocks: int = 0,
                    cache_policy="lru", anchor_interval: int = 0,
+                   parity_group: int = 0, verify: bool = False,
+                   on_error: str = "raise",
                    profile=None) -> "GenomicArchive":
         """FASTQ bytes → encoded archive + ReadIndex + device name table.
         cache_blocks > 0 enables the device-resident decoded-block cache
@@ -59,6 +61,10 @@ class GenomicArchive:
         (global mode) emits a wavefront restart point every that many
         blocks, so point queries decode one anchor window instead of the
         whole prefix — global-class ratios with bounded random access.
+        `parity_group=k` stores one XOR parity block per k compressed
+        blocks (self-healing: any single corrupted block per group
+        reconstructs on device); `verify`/`on_error` set the store-wide
+        digest-check defaults (see `repro.resilience`).
         `profile` (an `repro.tune.EncodeProfile`, e.g. from `autotune`)
         supplies every encode knob at once — pass it INSTEAD of
         block_size/mode/entropy/anchor_interval."""
@@ -68,11 +74,12 @@ class GenomicArchive:
         starts, names = parse_fastq_records(data)
         archive = encode(data, block_size=block_size, mode=mode,
                          entropy=entropy, anchor_interval=anchor_interval,
-                         profile=profile)
+                         parity_group=parity_group, profile=profile)
         index = ReadIndex(starts=starts, block_size=archive.block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
-                                        cache_policy=cache_policy)
+                                        cache_policy=cache_policy,
+                                        verify=verify, on_error=on_error)
         return cls(store, names=names)
 
     @classmethod
@@ -80,7 +87,8 @@ class GenomicArchive:
                      block_size: int = 16 * 1024, mode: str = "ra",
                      entropy: str = "rans", backend: str = "auto",
                      cache_blocks: int = 0, cache_policy="lru",
-                     anchor_interval: int = 0,
+                     anchor_interval: int = 0, parity_group: int = 0,
+                     verify: bool = False, on_error: str = "raise",
                      profile=None) -> "GenomicArchive":
         """Fixed-size records (tokenized corpora): arithmetic index, no
         names. `data` is truncated to a whole number of records.
@@ -94,12 +102,13 @@ class GenomicArchive:
         data = data[:n_rec * record_bytes]
         archive = encode(data, block_size=block_size, mode=mode,
                          entropy=entropy, anchor_interval=anchor_interval,
-                         profile=profile)
+                         parity_group=parity_group, profile=profile)
         index = ReadIndex.fixed_records(n_rec, record_bytes,
                                         archive.block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
-                                        cache_policy=cache_policy)
+                                        cache_policy=cache_policy,
+                                        verify=verify, on_error=on_error)
         return cls(store)
 
     @classmethod
@@ -172,22 +181,49 @@ class GenomicArchive:
 
     @classmethod
     def open(cls, path: str, backend: str = "auto", cache_blocks: int = 0,
-             cache_policy="lru") -> "GenomicArchive":
+             cache_policy="lru", verify: bool = False,
+             on_error: str = "raise") -> "GenomicArchive":
         """Open an archive written by `save` — deserialize the compressed
         payload, rebuild the read index/name table, ship to device. The
-        inverse of `save`; no encode work happens here."""
+        inverse of `save`; no encode work happens here.
+
+        Every container field validates BEFORE any slice is trusted: a
+        truncated, wrong-magic, or header-mangled file raises a typed
+        `CorruptArchiveError` naming what failed instead of an arbitrary
+        struct/json error deep in deserialization."""
         import json
         import struct
-        from repro.core.format import deserialize
+        from repro.core.format import CorruptArchiveError, deserialize
         from repro.core.index import ReadIndex
         from repro.core.residency import CompressedResidentStore
         with open(path, "rb") as f:
             blob = f.read()
+        if len(blob) < 12:
+            raise CorruptArchiveError(
+                f"{path}: truncated container ({len(blob)} bytes; the "
+                f"magic + header-length prelude alone is 12)")
         if blob[:8] != cls._DISK_MAGIC:
-            raise ValueError(f"{path}: not a GenomicArchive.save file "
-                             f"(magic {blob[:8]!r})")
+            raise CorruptArchiveError(
+                f"{path}: not a GenomicArchive.save file "
+                f"(magic {blob[:8]!r}, expected {cls._DISK_MAGIC!r})")
         (hlen,) = struct.unpack_from("<I", blob, 8)
-        hdr = json.loads(blob[12:12 + hlen].decode())
+        if 12 + hlen > len(blob):
+            raise CorruptArchiveError(
+                f"{path}: header length {hlen} overruns the "
+                f"{len(blob)}-byte container")
+        try:
+            hdr = json.loads(blob[12:12 + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise CorruptArchiveError(
+                f"{path}: container header is not valid JSON ({e})") from e
+        if not isinstance(hdr, dict):
+            raise CorruptArchiveError(
+                f"{path}: container header decodes to "
+                f"{type(hdr).__name__}, expected an object")
+        if 12 + hlen == len(blob):
+            raise CorruptArchiveError(
+                f"{path}: container carries no archive payload after the "
+                f"header")
         archive = deserialize(blob[12 + hlen:])
         index = None
         if "record_bytes" in hdr:
@@ -195,12 +231,18 @@ class GenomicArchive:
                                             int(hdr["record_bytes"]),
                                             archive.block_size)
         elif "starts" in hdr:
-            index = ReadIndex(
-                starts=np.asarray(hdr["starts"], np.uint64),
-                block_size=archive.block_size)
+            starts = np.asarray(hdr["starts"], np.uint64)
+            if starts.size == 0 or int(starts[-1]) != archive.raw_size:
+                raise CorruptArchiveError(
+                    f"{path}: read-index starts end at "
+                    f"{int(starts[-1]) if starts.size else 'nothing'} but "
+                    f"the archive decodes {archive.raw_size} bytes")
+            index = ReadIndex(starts=starts,
+                              block_size=archive.block_size)
         store = CompressedResidentStore(archive, index, backend=backend,
                                         cache_blocks=cache_blocks,
-                                        cache_policy=cache_policy)
+                                        cache_policy=cache_policy,
+                                        verify=verify, on_error=on_error)
         names = ([n.encode("latin-1") for n in hdr["names"]]
                  if "names" in hdr else None)
         return cls(store, names=names)
@@ -224,13 +266,20 @@ class GenomicArchive:
                               sampler=sampler, prefetch=prefetch, seed=seed,
                               **kwargs)
 
-    def query(self, addrs: Sequence[Address], mode2: bool = True
+    def query(self, addrs: Sequence[Address], mode2: bool = True,
+              verify: Optional[bool] = None, on_error: Optional[str] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Any batch of addresses → ((B, max_len) u8 zero-padded payloads,
-        (B,) i32 lengths), one DecodePlan, one device execution."""
+        (B,) i32 lengths), one DecodePlan, one device execution.
+
+        `verify`/`on_error` override the store defaults for this call:
+        digest-check every decoded block, recovering from parity
+        (`"repair"`) or degrading per-address (`"partial"`, outcomes in
+        `last_corrupt`) instead of raising."""
         if not isinstance(addrs, np.ndarray) and len(addrs) == 0:
             return (jnp.zeros((0, 1), jnp.uint8), jnp.zeros((0,), jnp.int32))
-        return self.executor.run(self.planner.plan(addrs), mode2=mode2)
+        return self.executor.run(self.planner.plan(addrs), mode2=mode2,
+                                 verify=verify, on_error=on_error)
 
     def query_bytes(self, addr: Address, mode2: bool = True) -> np.ndarray:
         """Single address → exact payload bytes (host u8 array)."""
@@ -238,17 +287,18 @@ class GenomicArchive:
         return np.asarray(rows[0])[:int(lens[0])]
 
     def stream(self, addrs: Sequence[Address], max_resident_bytes: int,
-               mode2: bool = True, verify: bool = False
-               ) -> Iterator[np.ndarray]:
+               mode2: bool = True, verify: bool = False,
+               on_error: str = "raise") -> Iterator[np.ndarray]:
         """Budgeted decode of queries of ANY size: yields u8 chunks whose
         concatenation is the concatenated payloads, never materializing
         more than `max_resident_bytes` of decoded rows + gather output.
         `verify=True` checks per-block digests on device before each chunk
-        is cropped to spans (raises `BlockDigestError` on corruption)."""
+        is cropped to spans; `on_error` picks the recovery semantics
+        (raise `BlockDigestError` | parity `"repair"` | `"partial"`)."""
         ex = StreamingExecutor(self.store,
                                max_resident_bytes=max_resident_bytes,
                                mode2=mode2, planner=self.planner,
-                               verify=verify)
+                               verify=verify, on_error=on_error)
         return ex.chunks(addrs)
 
     def __getitem__(self, key: Union[Address, slice]) -> np.ndarray:
@@ -279,6 +329,18 @@ class GenomicArchive:
         """Decoded-block cache counters: hits/misses/evictions/installs,
         bytes_resident, decode_launches, policy (zeros when disabled)."""
         return self.store.cache_info()
+
+    def recover_info(self) -> dict:
+        """Recovery counters of the underlying decoder: blocks
+        parity-`reconstructed`, decode `retries`, `unrecoverable`
+        failures, and currently `quarantined` blocks."""
+        return self.store.decoder.recover_info()
+
+    @property
+    def last_corrupt(self) -> np.ndarray:
+        """Per-address corrupt mask of the most recent query (bool[B];
+        all-False unless `on_error="partial"` met unrecoverable blocks)."""
+        return self.executor.last_corrupt
 
     def __repr__(self) -> str:
         st = self.stats()

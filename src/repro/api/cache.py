@@ -525,6 +525,26 @@ class BlockCache:
         """plan + realize in one call (the store's `_rows_for_blocks`)."""
         return self.realize(self.plan(uniq), decode)
 
+    def invalidate(self, blocks: np.ndarray) -> int:
+        """Evict `blocks` from the slot maps without touching the buffer
+        (their slots free; stale rows are unreachable once unmapped).
+
+        The quarantine path: `plan()` registers misses as resident BEFORE
+        the decode runs, so when a verified decode reports corrupt blocks
+        (`Decoder.last_bad_blocks`) their zeroed/garbage rows are already
+        installed — the store invalidates them right after `realize` so
+        they are never served as hits. Returns the number evicted."""
+        blocks = np.unique(np.asarray(blocks, np.int64).reshape(-1))
+        blocks = blocks[(blocks >= 0) & (blocks < self.n_blocks)]
+        slots = self.slot_of[blocks]
+        live = slots >= 0
+        if not live.any():
+            return 0
+        self.slot_block[slots[live]] = -1
+        self.slot_of[blocks[live]] = -1
+        self.evictions += int(live.sum())
+        return int(live.sum())
+
     # ---------------------------------------------------------- co-install
     def install_extras(self, blocks: np.ndarray, rows: jnp.ndarray) -> int:
         """Opportunistically install co-decoded rows into FREE slots only.
@@ -675,6 +695,11 @@ class ShardedBlockCache:
         self.buf = jax.device_put(
             jnp.zeros((self.part.n_shards, self.capacity, self.block_size),
                       jnp.uint8), self._spec)
+
+    def invalidate(self, blocks: np.ndarray) -> int:
+        """Evict global block ids from whichever shard's slot map holds
+        them (quarantine path — see `BlockCache.invalidate`)."""
+        return sum(c.invalidate(blocks) for c in self.shards)
 
     # ------------------------------------------------------------ rows_for
     def rows_for(self, uniq: np.ndarray, decode_stacked) -> jnp.ndarray:

@@ -100,7 +100,8 @@ class ArchiveDataset:
                  seq_len: Optional[int] = None,
                  sampler: Union[str, dict, UniformSampler] = "uniform",
                  prefetch: int = 2, seed: int = 0,
-                 sync_ready: bool = True):
+                 sync_ready: bool = True, verify: Optional[bool] = None,
+                 on_error: Optional[str] = None):
         store = archive.store
         if store.index is None:
             raise ValueError("dataset() needs an indexed archive "
@@ -122,6 +123,11 @@ class ArchiveDataset:
                                     self.batch_size, seed=seed)
         self.prefetch = int(prefetch)
         self.sync_ready = bool(sync_ready)
+        # detect→recover knobs for every batch decode (None = the store's
+        # defaults); "repair" keeps training bit-exact through parity
+        # reconstruction instead of crashing the input pipeline
+        self.verify = verify
+        self.on_error = on_error
         self.step = 0                 # next step to CONSUME (checkpoint key)
         self._active: Optional[PrefetchingLoader] = None
 
@@ -129,7 +135,9 @@ class ArchiveDataset:
     def fetch_ids(self, ids: np.ndarray) -> jnp.ndarray:
         """ids → (len(ids), record_bytes) u8 rows, one DecodePlan through
         the cache-riding device executor (zero-padded past short reads)."""
-        rows, _ = self.archive.query(np.asarray(ids, np.int64))
+        rows, _ = self.archive.query(np.asarray(ids, np.int64),
+                                     verify=self.verify,
+                                     on_error=self.on_error)
         rec = self.record_bytes
         if rows.shape[1] > rec:
             rows = rows[:, :rec]

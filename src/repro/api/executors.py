@@ -41,15 +41,20 @@ class _DecoderStore:
     _cache = None
     _cache_cap = 0
     _max_len = _max_span = 1
+    verify = False
+    on_error = "raise"
 
     def __init__(self, decoder):
         self.decoder = decoder
         self.block_size = decoder.da.block_size
 
-    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
+    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool,
+                         verify: bool = False,
+                         on_error: str = "raise") -> jnp.ndarray:
         decode = (self.decoder.decode_blocks if mode2
                   else self.decoder.decode_blocks_host_entropy)
-        return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
+        return decode(_pad_pow2(uniq.astype(np.int32)), verify=verify,
+                      on_error=on_error)[:uniq.size]
 
 
 class DeviceExecutor:
@@ -61,11 +66,19 @@ class DeviceExecutor:
 
     def __init__(self, store):
         self.store = store
+        # per-address corrupt mask of the most recent run (bool[B]):
+        # all-False unless on_error="partial" met unrecoverable blocks —
+        # the typed per-address outcome the serving plane consumes
+        self.last_corrupt = np.zeros(0, bool)
 
-    def run(self, plan: DecodePlan, mode2: bool = True
+    def run(self, plan: DecodePlan, mode2: bool = True,
+            verify: Optional[bool] = None, on_error: Optional[str] = None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         store = self.store
+        verify = store.verify if verify is None else verify
+        on_error = store.on_error if on_error is None else on_error
         B = plan.n_queries
+        self.last_corrupt = np.zeros(B, bool)
         if B == 0:
             return (jnp.zeros((0, plan.max_len), jnp.uint8),
                     jnp.zeros((0,), jnp.int32))
@@ -73,10 +86,13 @@ class DeviceExecutor:
         # checkpointed-wavefront archives take the staged path: the decoder
         # groups the covering set by anchor window (bounded decode instead
         # of the whole prefix the jitted device core would materialize),
-        # and the rows ride the block cache when enabled
+        # and the rows ride the block cache when enabled. Verified runs
+        # are staged too: the fused cores have no digest check, and the
+        # recovery loop composes at the decoder, not in this executor.
         anchored = (dec.da.mode == "global" and dec.da.anchors is not None
                     and dec.da.anchors.size > 0)
-        jitted = mode2 and store._cache_cap == 0 and not anchored
+        jitted = (mode2 and store._cache_cap == 0 and not anchored
+                  and not verify)
         # depth-bucketed reroute: the fused device cores run a static
         # archive-wide round count, so a selection whose covering set sits
         # entirely below the deepest bucket saves rounds only on the
@@ -108,7 +124,13 @@ class DeviceExecutor:
         # launch per miss set) / the Mode-1 host entropy stage, then the
         # same jitted ragged gather. Bytes stay on device throughout.
         _, r0, _, uniq, row_map = plan.host_cover()
-        rows = store._rows_for_blocks(uniq, mode2)
+        rows = store._rows_for_blocks(uniq, mode2, verify=verify,
+                                      on_error=on_error)
+        if verify and dec.last_bad_blocks.size:
+            # per-address typed outcomes: an address is corrupt iff any
+            # of its covering blocks is (its bytes include zeroed rows)
+            bad_row = np.isin(uniq, dec.last_bad_blocks)
+            self.last_corrupt = bad_row[row_map].any(axis=1)[:B]
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=plan.block_size, max_len=plan.max_len)
@@ -172,7 +194,10 @@ class StreamingExecutor:
     def __init__(self, store, max_resident_bytes: Optional[int] = None,
                  max_blocks_per_chunk: Optional[int] = None,
                  mode2: bool = True, planner: Optional[QueryPlanner] = None,
-                 verify: bool = False, sharded=None):
+                 verify: bool = False, sharded=None,
+                 on_error: str = "raise"):
+        from repro.resilience import check_on_error
+        self.on_error = check_on_error(on_error)
         self.store = store
         self.planner = planner or QueryPlanner(store)
         bs = store.block_size
@@ -344,15 +369,16 @@ class StreamingExecutor:
             # — the quantity the per-shard budget bounds.
             dec.launch_rounds_last = []
             dec.decoded_blocks_last = 0
-            rows = self.sharded._decode_uncached(
-                uniq.astype(np.int64), pad=False, verify=self.verify)
+            rows = self.sharded.stream_rows(
+                uniq.astype(np.int64), verify=self.verify,
+                on_error=self.on_error)
         else:
             decode = (dec.decode_blocks if self.mode2
                       else dec.decode_blocks_host_entropy)
             # pad_groups=False: depth-bucket launches stay exact-size here
             # for the same budget reason the selection is not pow2-padded
             rows = decode(uniq.astype(np.int32), verify=self.verify,
-                          pad_groups=False)
+                          pad_groups=False, on_error=self.on_error)
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=bs, max_len=plan.max_len)
@@ -398,8 +424,10 @@ class ShardedExecutor:
 
     def __init__(self, store, mesh, axes: Tuple[str, ...] = ("data",),
                  residency: str = "auto", cache_blocks: int = 0,
-                 cache_policy="lru", verify: bool = False):
+                 cache_policy="lru", verify: bool = False,
+                 on_error: str = "raise"):
         from repro.core.sharded_decode import _mesh_shards
+        from repro.resilience import check_on_error
         if residency not in ("auto", "partition", "replicate"):
             raise ValueError(
                 f"residency={residency!r} not in "
@@ -408,6 +436,7 @@ class ShardedExecutor:
         self.mesh = mesh
         self.axes = axes
         self.verify = verify
+        self.on_error = check_on_error(on_error)
         dec = store.decoder
         if residency == "auto":
             residency = ("partition"
@@ -421,12 +450,13 @@ class ShardedExecutor:
                 self.sharded = attach(mesh, axes=axes,
                                       cache_blocks=cache_blocks,
                                       cache_policy=cache_policy,
-                                      verify=verify)
+                                      verify=verify, on_error=on_error)
             else:   # bare-decoder store adapter: own the residency here
                 from repro.core.residency import ShardedResidency
                 self.sharded = ShardedResidency(
                     store, mesh, axes=axes, cache_blocks=cache_blocks,
-                    cache_policy=cache_policy, verify=verify)
+                    cache_policy=cache_policy, verify=verify,
+                    on_error=on_error)
         else:
             if cache_blocks:
                 raise ValueError(
@@ -453,9 +483,11 @@ class ShardedExecutor:
         dec = self.store.decoder
         if self.sharded is not None:
             # partitioned: the residency plane owns the per-shard split,
-            # cache riding, depth bucketing and shard-local verify —
-            # shard-aware work composes there, never in this executor
-            rows = self.sharded.rows_for_blocks(uniq)
+            # cache riding, depth bucketing, shard-local verify and the
+            # parity recovery loop — shard-aware work composes there,
+            # never in this executor
+            rows = self.sharded.rows_for_blocks(uniq,
+                                                on_error=self.on_error)
         else:
             dec.launch_rounds_last = []
             # depth-bucketed fan-out: one sharded launch per resolve-round
@@ -479,7 +511,18 @@ class ShardedExecutor:
                 inv[order] = np.arange(uniq.size)
                 rows = jnp.concatenate(parts, axis=0)[jnp.asarray(inv)]
             if self.verify:
-                dec.verify_rows(uniq, rows)
+                from repro.core.decoder import BlockDigestError
+                try:
+                    dec.verify_rows(uniq, rows)
+                except BlockDigestError:
+                    if self.on_error == "raise":
+                        raise
+                    # replicated regime: the full archive lives on every
+                    # device, so recovery is just a verified re-decode
+                    # through the decoder's parity loop
+                    rows = dec.decode_blocks(
+                        _pad_pow2(uniq.astype(np.int32)), verify=True,
+                        on_error=self.on_error)[:uniq.size]
         out = _gather_jit(rows, jnp.asarray(row_map), jnp.asarray(r0),
                           jnp.asarray(plan.lengths.astype(np.int32)),
                           block_size=plan.block_size, max_len=plan.max_len)

@@ -501,6 +501,25 @@ class Decoder:
         # cache path ever consumes them.
         self.collect_window_rows = False
         self.last_window_rows: list = []
+        # ---- detect → recover → degrade state (PR 10) ----
+        # blocks proven unrecoverable under on_error="partial": never
+        # re-decoded, never cache-installed; "raise"/"repair" requests
+        # that touch them fail immediately
+        self.quarantined: set = set()
+        self._recover = {"reconstructed": 0, "retries": 0,
+                         "unrecoverable": 0}
+        # global block ids that failed (quarantined or zeroed) in the
+        # most recent decode call — callers (cache invalidation,
+        # per-address outcomes) read this right after the call
+        self.last_bad_blocks = np.zeros(0, np.int64)
+        # blocks that failed INITIAL verification in the most recent call
+        # even if later repaired — window rows collected before the
+        # repair pass may hold their pre-repair garbage, so the cache
+        # co-install path must skip them
+        self.last_suspect_blocks = np.zeros(0, np.int64)
+        # fault-injection hook: called once at the top of every decode
+        # call when armed (repro.resilience.faults.FaultInjector)
+        self.fault_hook = None
 
     def _api_store(self):
         """Store-shaped adapter over this decoder so the host APIs ride the
@@ -585,11 +604,151 @@ class Decoder:
         sel = np.asarray(sel).reshape(-1)
         if sel.size == 0:
             return
+        self.check_digests(sel, self._row_digests(sel, rows))
+
+    def _row_digests(self, sel: np.ndarray, rows: jnp.ndarray) -> np.ndarray:
+        """Device FNV over decoded rows → host u64 digests (one per row)."""
         fhi, flo = _fnv_rows_jit(
             rows, jnp.asarray(self.archive.block_len[sel]))
-        got = ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
-               | np.asarray(flo).astype(np.uint64))
-        self.check_digests(sel, got)
+        return ((np.asarray(fhi).astype(np.uint64) << np.uint64(32))
+                | np.asarray(flo).astype(np.uint64))
+
+    # ------------------------------------------- recover / degrade (PR 10)
+    def recover_info(self) -> dict:
+        """Cumulative recovery counters: `reconstructed` (blocks healed
+        by parity + re-verified bit-perfect), `retries` (recovery decode
+        passes), `unrecoverable` (blocks that stayed corrupt after
+        reconstruction), `quarantined` (currently quarantined blocks)."""
+        info = dict(self._recover)
+        info["quarantined"] = len(self.quarantined)
+        return info
+
+    def heal_blocks(self, bad) -> np.ndarray:
+        """Parity-reconstruct the payloads of `bad` on device (lazy import:
+        repro.resilience imports nothing from this module, but core stays
+        importable without it on the hot path)."""
+        from repro.resilience.parity import reconstruct_blocks
+        return reconstruct_blocks(self, bad)
+
+    def _verify_or_recover(self, sel: np.ndarray, rows: jnp.ndarray,
+                           on_error: str, redecode) -> jnp.ndarray:
+        """Digest-check decoded `rows`; on mismatch, run the detect →
+        recover → degrade loop per `on_error`. `redecode(blocks)` must
+        return fresh unverified rows for global block ids `blocks`.
+
+        Recovery iterates because corruption is not always where the
+        digest fails: in "global" mode a corrupt payload poisons every
+        downstream block of its anchor window (the match chain), so only
+        the EARLIEST failing block per window is a reconstruction target
+        each pass — healing it and re-decoding clears the downstream
+        failures (or exposes the next true corruption). "ra" blocks are
+        independent, so every failing block is a target at once. The
+        loop stops when clean, when the bad set stops shrinking (e.g.
+        two corruptions in one parity group reconstruct to garbage), or
+        when the archive carries no parity."""
+        sel = np.asarray(sel, np.int64).reshape(-1)
+        if sel.size == 0:
+            return rows
+        got = self._row_digests(sel, rows)
+        want = self.archive.block_fnv[sel]
+        badpos = np.flatnonzero(got != want)
+        if badpos.size == 0:
+            return rows
+        if on_error == "raise":
+            self.check_digests(sel, got)        # raises BlockDigestError
+        bad = np.unique(sel[badpos])
+        self.last_suspect_blocks = np.union1d(self.last_suspect_blocks, bad)
+        for _ in range(int(bad.size)):
+            if self.da.mode == "global":
+                targets = np.asarray(
+                    [int(bad[idx].min()) for _, _, idx
+                     in self._anchor_groups(bad)], np.int64)
+            else:
+                targets = bad
+            if self.heal_blocks(targets).size == 0:
+                break                           # no parity in the archive
+            self._recover["retries"] += 1
+            new_rows = redecode(bad)
+            ok = (self._row_digests(bad, new_rows)
+                  == self.archive.block_fnv[bad])
+            fixed = set(bad[ok].tolist())
+            self._recover["reconstructed"] += int(
+                sum(int(t) in fixed for t in targets))
+            if fixed:
+                pos_in_bad = {int(b): i for i, b in enumerate(bad)}
+                fix_sel = np.asarray(
+                    [i for i in badpos if int(sel[i]) in fixed], np.int64)
+                src = np.asarray([pos_in_bad[int(sel[i])] for i in fix_sel],
+                                 np.int64)
+                rows = rows.at[fix_sel].set(new_rows[src])
+                badpos = np.asarray(
+                    [i for i in badpos if int(sel[i]) not in fixed],
+                    np.int64)
+            new_bad = bad[~ok]
+            if new_bad.size == 0 or new_bad.size >= bad.size:
+                bad = new_bad
+                break
+            bad = new_bad
+        if bad.size:
+            self._recover["unrecoverable"] += int(bad.size)
+            self.last_bad_blocks = np.union1d(self.last_bad_blocks, bad)
+            if on_error == "repair":
+                why = ("archive carries no parity"
+                       if not self.archive.parity_group else
+                       "reconstruction re-verify failed (sibling or "
+                       "digest-table corruption)")
+                raise BlockDigestError(
+                    f"blocks {bad.tolist()} unrecoverable: {why}")
+            self.quarantined.update(int(b) for b in bad)
+            if badpos.size:
+                rows = rows.at[jnp.asarray(badpos)].set(0)
+        return rows
+
+    def _run_decode(self, raw, sel, verify: bool, pad_groups: bool,
+                    on_error: str) -> jnp.ndarray:
+        """Shared decode entry: on_error validation, fault-injection
+        hook, quarantine pre-filter, then `raw(sel_np, pad_groups)` and
+        the verify/recover tail."""
+        from repro.resilience import check_on_error
+        check_on_error(on_error)
+        sel_np = np.asarray(sel, np.int64).reshape(-1)
+        self.last_bad_blocks = np.zeros(0, np.int64)
+        self.last_suspect_blocks = np.zeros(0, np.int64)
+        self.launch_rounds_last = []
+        if self.fault_hook is not None:
+            self.fault_hook()
+        keep = None
+        quar = np.zeros(0, np.int64)
+        work = sel_np
+        if self.quarantined and sel_np.size:
+            qmask = np.isin(sel_np, np.fromiter(self.quarantined, np.int64,
+                                                len(self.quarantined)))
+            if qmask.any():
+                if on_error != "partial":
+                    b = int(sel_np[qmask][0])
+                    raise BlockDigestError(
+                        f"block {b} is quarantined (unrecoverable in an "
+                        f"earlier decode); on_error='partial' degrades "
+                        f"instead of raising")
+                keep = np.flatnonzero(~qmask)
+                quar = np.unique(sel_np[qmask])
+                work = sel_np[keep]
+        if work.size:
+            rows = raw(work, pad_groups)
+            if verify:
+                rows = self._verify_or_recover(
+                    work, rows, on_error,
+                    lambda b: raw(np.asarray(b, np.int64).reshape(-1),
+                                  pad_groups))
+        else:
+            rows = jnp.zeros((0, self.da.block_size), jnp.uint8)
+        if keep is not None:
+            full = jnp.zeros((sel_np.size, self.da.block_size), jnp.uint8)
+            if keep.size:
+                full = full.at[jnp.asarray(keep)].set(rows)
+            rows = full
+            self.last_bad_blocks = np.union1d(self.last_bad_blocks, quar)
+        return rows
 
     # ---------------------------------------------------- window decode
     def _window_rows(self, first: int, last: int) -> jnp.ndarray:
@@ -695,40 +854,45 @@ class Decoder:
         return jnp.concatenate(pieces, axis=0)[inv]
 
     def decode_blocks(self, sel, verify: bool = False,
-                      pad_groups: bool = True) -> jnp.ndarray:
-        self.launch_rounds_last = []
-        sel = jnp.asarray(sel, jnp.int32)
+                      pad_groups: bool = True,
+                      on_error: str = "raise") -> jnp.ndarray:
+        return self._run_decode(self._decode_blocks_raw, sel, verify,
+                                pad_groups, on_error)
+
+    def _decode_blocks_raw(self, sel_np: np.ndarray,
+                           pad_groups: bool = True) -> jnp.ndarray:
+        sel = jnp.asarray(sel_np, jnp.int32)
         if self.da.mode == "global":
-            out = self._decode_global_rows(np.asarray(sel, np.int64))
-        else:
-            sel_np = np.asarray(sel, np.int64).reshape(-1)
-            groups = self._ra_groups(sel_np)
-            if groups is None:
-                out = _decode_sel_jit(self.arrays, sel,
-                                      self._meta(len(sel)), self.backend)
-                self.launch_rounds_last.append(self.da.max_depth)
-                self.decoded_blocks_last = int(sel.shape[0])
-            else:
-                out = self._assemble_ra_groups(
-                    sel_np, groups,
-                    lambda g, r: _decode_sel_jit(
-                        self.arrays, jnp.asarray(g),
-                        self._meta(g.size, n_rounds=r), self.backend),
-                    pad_groups)
-        if verify:
-            self.verify_rows(np.asarray(sel), out)
-        return out
+            return self._decode_global_rows(np.asarray(sel_np, np.int64))
+        groups = self._ra_groups(sel_np)
+        if groups is None:
+            out = _decode_sel_jit(self.arrays, sel,
+                                  self._meta(len(sel_np)), self.backend)
+            self.launch_rounds_last.append(self.da.max_depth)
+            self.decoded_blocks_last = int(sel_np.size)
+            return out
+        return self._assemble_ra_groups(
+            sel_np, groups,
+            lambda g, r: _decode_sel_jit(
+                self.arrays, jnp.asarray(g),
+                self._meta(g.size, n_rounds=r), self.backend),
+            pad_groups)
 
     def decode_blocks_host_entropy(self, sel, verify: bool = False,
-                                   pad_groups: bool = True) -> jnp.ndarray:
+                                   pad_groups: bool = True,
+                                   on_error: str = "raise") -> jnp.ndarray:
         """Mode 1: host entropy + device match. Global selections decode
         per anchor window ([0, max(sel)] when anchor-free) so every
         cross-block match reference resolves inside the decoded window —
         a partial selection never reads bytes that were not decoded."""
+        return self._run_decode(self._decode_blocks_host_raw, sel, verify,
+                                pad_groups, on_error)
+
+    def _decode_blocks_host_raw(self, sel: np.ndarray,
+                                pad_groups: bool = True) -> jnp.ndarray:
         sel = np.asarray(sel)
         a = self.archive
         max_cmds = int(a.n_cmds.max(initial=1))
-        self.launch_rounds_last = []
         if a.mode == "global":
             self.decoded_blocks_last = 0
             self.last_window_rows = []
@@ -779,8 +943,6 @@ class Decoder:
             else:
                 out = self._assemble_ra_groups(sel_np, groups, match_group,
                                                pad_groups)
-        if verify:
-            self.verify_rows(sel, out)
         return out
 
     # ------------------------------------------------------------ host APIs
@@ -794,14 +956,20 @@ class Decoder:
         return np.asarray(rows[0])[:int(lens[0])]
 
     def decode_all(self, chunk_blocks: Optional[int] = None,
-                   mode2: bool = True, verify: bool = False) -> np.ndarray:
+                   mode2: bool = True, verify: bool = False,
+                   on_error: str = "raise") -> np.ndarray:
         """Whole-file decode; with chunk_blocks set, never materializes more
         than one chunk of decompressed output at a time (paper §5 v7-RA).
         Compatibility shim over `StreamingExecutor`.
 
         verify=True additionally checks `file_fnv` over the block digest
         table, then decodes block-selection-wise with per-block device
-        digest verification (`BlockDigestError` on the first mismatch)."""
+        digest verification. `on_error` picks the failure semantics:
+        "raise" (`BlockDigestError` on the first mismatch), "repair"
+        (parity reconstruction, raise only if unrecoverable), "partial"
+        (unrecoverable blocks quarantine and read back as zeros). A
+        corrupt digest TABLE (`file_fnv` fold mismatch) always raises:
+        no reference digests means nothing can be trusted or repaired."""
         raw = self.da.raw_size
         if raw == 0:
             return np.zeros(0, np.uint8)
@@ -818,7 +986,8 @@ class Decoder:
             parts = []
             for lo in range(0, self.da.n_blocks, step):
                 sel = np.arange(lo, min(lo + step, self.da.n_blocks))
-                rows = np.asarray(decode(sel, verify=True))
+                rows = np.asarray(decode(sel, verify=True,
+                                         on_error=on_error))
                 parts.extend(rows[i, :int(a.block_len[b])]
                              for i, b in enumerate(sel))
             return np.concatenate(parts) if parts else np.zeros(0, np.uint8)

@@ -39,7 +39,7 @@ def _planes_u64(vals: np.ndarray) -> np.ndarray:
 
 def validate_encode_params(block_size: int, mode: str, entropy: str,
                            anchor_interval: int, raw_size: int = 0,
-                           origin: int = 0) -> None:
+                           origin: int = 0, parity_group: int = 0) -> None:
     """Raise ValueError on any invalid encode-knob combination.
 
     The single home of the knob constraints, shared by `encode()` and the
@@ -60,6 +60,9 @@ def validate_encode_params(block_size: int, mode: str, entropy: str,
             "are already self-contained restart points)")
     if origin < 0:
         raise ValueError(f"origin must be >= 0, got {origin}")
+    if parity_group < 0:
+        raise ValueError(
+            f"parity_group must be >= 0 (0 = no parity), got {parity_group}")
     if mode == "global":
         # the device match phase resolves a decode window in one flat
         # int32 pointer space, so a single window must span < 2^31 bytes;
@@ -83,6 +86,7 @@ def encode(data: bytes | np.ndarray,
            hash_bits: int = 17,
            anchor_interval: int = 0,
            origin: int = 0,
+           parity_group: int = 0,
            profile=None) -> Archive:
     """Compress `data` into an ACEAPEX archive.
 
@@ -99,6 +103,13 @@ def encode(data: bytes | np.ndarray,
     match offsets are recorded relative to that origin. Block-level decode
     APIs are origin-transparent; byte-addressed query-plane entry points
     assume origin == 0.
+
+    `parity_group=k` (k > 0) XORs the compressed payload words of every
+    k-block group into a parity block stored in a v4 format tail: any
+    SINGLE corrupted payload per group is then reconstructable on device
+    (`repro.resilience`). k=1 is payload replication; parity overhead is
+    roughly 1/k of the payload bytes. 0 (default) writes a parity-free
+    archive, byte-identical to the v3 format.
 
     `profile` (a `repro.tune.EncodeProfile`) supplies block_size / mode /
     entropy / anchor_interval in one declared object — the autotuner's
@@ -123,8 +134,10 @@ def encode(data: bytes | np.ndarray,
     n = data.shape[0]
     anchor_interval = int(anchor_interval)
     origin = int(origin)
+    parity_group = int(parity_group)
     validate_encode_params(block_size, mode, entropy, anchor_interval,
-                           raw_size=n, origin=origin)
+                           raw_size=n, origin=origin,
+                           parity_group=parity_group)
     # "ra" offsets are block-local; two planes hold them only while the
     # block fits 16 bits. Larger blocks (e.g. PAPER1_BLOCK_SIZE) switch to
     # four planes — storing a >=64 KiB offset in two would silently
@@ -284,6 +297,17 @@ def encode(data: bytes | np.ndarray,
 
     S = len(streams)
     assert S == N_STREAMS * n_blocks
+    parity_words = np.zeros(0, np.uint16)
+    parity_off = np.zeros(1, np.int64)
+    if parity_group:
+        # block b's payload = words[word_off[b,0] : word_off[b+1,0]) —
+        # the four streams lie consecutively, both entropy backends
+        from repro.resilience.parity import build_parity
+        p_starts = np.asarray(w_off, np.int64).reshape(
+            n_blocks, N_STREAMS)[:, 0]
+        p_ends = np.append(p_starts[1:], np.int64(words.size))
+        parity_words, parity_off = build_parity(words, p_starts, p_ends,
+                                                parity_group)
     return Archive(
         block_size=block_size,
         raw_size=n,
@@ -304,4 +328,7 @@ def encode(data: bytes | np.ndarray,
         anchor_interval=anchor_interval if anchors.size else 0,
         anchors=anchors,
         block_depth=block_depth,
+        parity_group=parity_group,
+        parity_words=parity_words,
+        parity_off=parity_off,
     )

@@ -41,6 +41,16 @@ decoder runs exactly `max_depth` resolve rounds instead of
 rounds at the paper-1 1 MiB block size to the archive's true depth.
 v1/v2 (`ACEJAX02`/`ACEJAX03`) archives deserialize with depth unknown
 (`block_depth is None`) and decode through an early-exit resolver.
+
+Parity-protected archives (v4 header): `encode(..., parity_group=k)` XORs
+the compressed payload words of every k-block group into one parity row
+(RAID-5 over the word buffer, group-local). A block that fails its
+on-device FNV check is reconstructed from its group siblings + parity in
+one XOR-gather, re-verified, and the decode retried — single-block
+corruption heals without touching the host copy of the data. The parity
+tail (`ACEJAX05`) stores the group size, the flat parity words, and the
+per-group offsets; parity-free archives keep writing the v3 (`ACEJAX04`)
+bytes unchanged, and v1–v3 archives deserialize with `parity_group == 0`.
 """
 from __future__ import annotations
 
@@ -71,6 +81,12 @@ STREAM_NAMES = ("literals", "lengths", "offsets", "commands")
 
 FNV_OFFSET = np.uint64(0xCBF29CE484222325)
 FNV_PRIME = np.uint64(0x100000001B3)
+
+
+class CorruptArchiveError(ValueError):
+    """A serialized archive failed structural validation (bad magic,
+    truncated buffer, malformed table) — raised with the name of the
+    field that failed, before any decode touches the bytes."""
 
 
 def fnv1a64(data: np.ndarray) -> int:
@@ -169,10 +185,23 @@ class Archive:
                                   # i32[n_blocks] exact pointer-doubling
                                   # rounds each block needs (v3 header);
                                   # None = legacy archive, depth unknown
+    parity_group: int = 0         # blocks per XOR-parity group (v4 header;
+                                  # 0 = no parity protection)
+    parity_words: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.uint16))
+                                  # u16 flat parity rows, group g at
+                                  # parity_words[parity_off[g]:parity_off[g+1]]
+    parity_off: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(1, np.int64))
+                                  # i64[n_groups+1] prefix offsets
 
     @property
     def n_blocks(self) -> int:
         return int(self.block_start.shape[0])
+
+    @property
+    def n_parity_groups(self) -> int:
+        return max(0, int(self.parity_off.shape[0]) - 1)
 
     @property
     def max_depth(self) -> Optional[int]:
@@ -202,6 +231,8 @@ class Archive:
                 + self.anchors.size * 8
                 + (self.block_depth.size * 4
                    if self.block_depth is not None else 0)
+                + self.parity_words.size * 2
+                + (self.parity_off.size * 8 if self.parity_group else 0)
                 + 64)  # fixed header
 
     @property
@@ -212,6 +243,19 @@ class Archive:
 MAGIC_V1 = b"ACEJAX02"            # anchor-free layout (no anchor tail)
 MAGIC_V2 = b"ACEJAX03"            # v2: v1 layout + anchor table tail
 MAGIC = b"ACEJAX04"               # v3: v2 layout + block-depth tail
+MAGIC_V4 = b"ACEJAX05"            # v4: v3 layout + XOR-parity tail
+
+
+def block_payload_bounds(a: Archive) -> tuple:
+    """Per-block payload word range: block b's compressed payload is
+    `a.words[starts[b]:ends[b]]`. Both entropy backends lay the four
+    streams of each block contiguously and in block order, so the range
+    is [word_off[b, 0], word_off[b+1, 0]) with the last block ending at
+    `words.size` — the unit both the parity groups and the shard
+    partitioner operate on."""
+    starts = np.ascontiguousarray(a.word_off[:, 0], np.int64)
+    ends = np.append(starts[1:], np.int64(a.words.size))
+    return starts, ends
 
 
 def serialize(a: Archive) -> bytes:
@@ -222,11 +266,15 @@ def serialize(a: Archive) -> bytes:
     per-block chain-depth table, so a v3 reader accepts v1/v2 archives by
     stopping at the shorter body. An archive whose depth was never
     measured serializes an empty depth table (deserializes back to
-    `block_depth is None`)."""
+    `block_depth is None`). Parity-protected archives write the v4
+    (`ACEJAX05`) layout — the v3 body plus the parity tail; parity-free
+    archives keep the exact v3 bytes so pre-parity readers still open
+    them."""
     import struct
+    magic = MAGIC_V4 if a.parity_group else MAGIC
     head = struct.pack(
         "<8sQQQQB3xB3xQ",
-        MAGIC, a.block_size, a.raw_size, a.n_blocks, a.words.size,
+        magic, a.block_size, a.raw_size, a.n_blocks, a.words.size,
         {"ra": 0, "global": 1}[a.mode], {"rans": 0, "raw": 1}[a.entropy],
         a.file_fnv,
     )
@@ -251,52 +299,114 @@ def serialize(a: Archive) -> bytes:
     raw = depth.tobytes()
     parts.append(struct.pack("<Q", len(raw)))
     parts.append(raw)
+    if a.parity_group:
+        # v4 parity tail: group size, flat parity words, group offsets
+        parts.append(struct.pack("<Q", a.parity_group))
+        raw = np.ascontiguousarray(a.parity_words, dtype=np.uint16).tobytes()
+        parts.append(struct.pack("<Q", len(raw)))
+        parts.append(raw)
+        raw = np.ascontiguousarray(a.parity_off, dtype=np.int64).tobytes()
+        parts.append(struct.pack("<Q", len(raw)))
+        parts.append(raw)
     return b"".join(parts)
 
 
 def deserialize(buf: bytes) -> Archive:
+    """Parse a serialized archive. Structural damage — wrong magic, a
+    truncated buffer, a table whose recorded length does not match its
+    shape — raises `CorruptArchiveError` naming the field that failed,
+    never an opaque struct/reshape error from inside numpy."""
     import struct
     off = 0
 
-    def take(n):
+    def take(n, field):
         nonlocal off
         out = buf[off:off + n]
+        if len(out) != n:
+            raise CorruptArchiveError(
+                f"archive truncated in {field}: need {n} bytes at offset "
+                f"{off}, have {len(buf) - off}")
         off += n
         return out
 
-    head = take(struct.calcsize("<8sQQQQB3xB3xQ"))
+    head_fmt = "<8sQQQQB3xB3xQ"
+    head = take(struct.calcsize(head_fmt), "header")
     magic, block_size, raw_size, n_blocks, n_words_total, mode_b, ent_b, file_fnv = \
-        struct.unpack("<8sQQQQB3xB3xQ", head)
-    if magic not in (MAGIC, MAGIC_V2, MAGIC_V1):
-        raise ValueError(f"bad magic {magic!r}")
-    version = {MAGIC: 3, MAGIC_V2: 2, MAGIC_V1: 1}[magic]
-    (offset_bytes,) = struct.unpack("<Q", take(8))
+        struct.unpack(head_fmt, head)
+    if magic not in (MAGIC_V4, MAGIC, MAGIC_V2, MAGIC_V1):
+        raise CorruptArchiveError(f"bad magic {magic!r}")
+    version = {MAGIC_V4: 4, MAGIC: 3, MAGIC_V2: 2, MAGIC_V1: 1}[magic]
+    if mode_b not in (0, 1):
+        raise CorruptArchiveError(f"bad mode byte {mode_b}")
+    if ent_b not in (0, 1):
+        raise CorruptArchiveError(f"bad entropy byte {ent_b}")
+    if n_blocks > len(buf):
+        # cheap sanity bound: every block costs >= 1 byte of tables, so a
+        # count past the buffer size is garbage, not a huge archive
+        raise CorruptArchiveError(
+            f"implausible n_blocks {n_blocks} for a {len(buf)}-byte buffer")
+    (offset_bytes,) = struct.unpack("<Q", take(8, "offset_bytes"))
 
-    def arr(dt, shape):
-        (nb,) = struct.unpack("<Q", take(8))
-        a = np.frombuffer(take(nb), dtype=dt).copy()
+    def arr(dt, shape, field):
+        (nb,) = struct.unpack("<Q", take(8, f"{field} length"))
+        if nb > len(buf) - off:
+            raise CorruptArchiveError(
+                f"archive truncated in {field}: recorded {nb} bytes, "
+                f"{len(buf) - off} remain")
+        item = np.dtype(dt).itemsize
+        if nb % item:
+            raise CorruptArchiveError(
+                f"{field}: {nb} bytes is not a multiple of itemsize {item}")
+        a = np.frombuffer(take(nb, field), dtype=dt).copy()
+        want = int(np.prod([s for s in shape if s >= 0]))
+        if -1 not in shape and a.size != want:
+            raise CorruptArchiveError(
+                f"{field}: expected {want} entries for shape {shape}, "
+                f"got {a.size}")
         return a.reshape(shape)
 
-    freqs = arr(np.uint16, (N_STREAMS, 256))
-    words = arr(np.uint16, (-1,))
-    word_off = arr(np.int64, (n_blocks, N_STREAMS))
-    n_words = arr(np.int32, (n_blocks, N_STREAMS))
-    n_syms = arr(np.int32, (n_blocks, N_STREAMS))
-    lanes = arr(np.int32, (n_blocks, N_STREAMS))
-    n_cmds = arr(np.int32, (n_blocks,))
-    block_start = arr(np.int64, (n_blocks,))
-    block_len = arr(np.int32, (n_blocks,))
-    block_fnv = arr(np.uint64, (n_blocks,))
+    freqs = arr(np.uint16, (N_STREAMS, 256), "freqs")
+    words = arr(np.uint16, (-1,), "words")
+    if words.size != n_words_total:
+        raise CorruptArchiveError(
+            f"words: header records {n_words_total} words, body has "
+            f"{words.size}")
+    word_off = arr(np.int64, (n_blocks, N_STREAMS), "word_off")
+    n_words = arr(np.int32, (n_blocks, N_STREAMS), "n_words")
+    n_syms = arr(np.int32, (n_blocks, N_STREAMS), "n_syms")
+    lanes = arr(np.int32, (n_blocks, N_STREAMS), "lanes")
+    n_cmds = arr(np.int32, (n_blocks,), "n_cmds")
+    block_start = arr(np.int64, (n_blocks,), "block_start")
+    block_len = arr(np.int32, (n_blocks,), "block_len")
+    block_fnv = arr(np.uint64, (n_blocks,), "block_fnv")
     if version >= 2:
-        (anchor_interval,) = struct.unpack("<Q", take(8))
-        anchors = arr(np.int64, (-1,))
+        (anchor_interval,) = struct.unpack("<Q", take(8, "anchor_interval"))
+        anchors = arr(np.int64, (-1,), "anchors")
     else:                           # v1: anchor-free by definition
         anchor_interval = 0
         anchors = np.zeros(0, np.int64)
     block_depth = None
     if version >= 3:                # v3: per-block chain-depth table
-        depth = arr(np.int32, (-1,))
+        depth = arr(np.int32, (-1,), "block_depth")
         block_depth = depth if depth.size else None
+    parity_group = 0
+    parity_words = np.zeros(0, np.uint16)
+    parity_off = np.zeros(1, np.int64)
+    if version >= 4:                # v4: XOR-parity tail
+        (parity_group,) = struct.unpack("<Q", take(8, "parity_group"))
+        parity_words = arr(np.uint16, (-1,), "parity_words")
+        parity_off = arr(np.int64, (-1,), "parity_off")
+        if parity_group:
+            n_groups = -(-n_blocks // parity_group)
+            if parity_off.size != n_groups + 1:
+                raise CorruptArchiveError(
+                    f"parity_off: expected {n_groups + 1} offsets for "
+                    f"{n_blocks} blocks in groups of {parity_group}, got "
+                    f"{parity_off.size}")
+            if parity_off.size and int(parity_off[-1]) != parity_words.size:
+                raise CorruptArchiveError(
+                    f"parity_words: offsets end at {int(parity_off[-1])}, "
+                    f"buffer has {parity_words.size} words")
     return Archive(
         block_size=block_size, raw_size=raw_size,
         mode={0: "ra", 1: "global"}[mode_b],
@@ -307,4 +417,6 @@ def deserialize(buf: bytes) -> Archive:
         offset_bytes=int(offset_bytes),
         anchor_interval=int(anchor_interval), anchors=anchors,
         block_depth=block_depth,
+        parity_group=int(parity_group), parity_words=parity_words,
+        parity_off=parity_off,
     )

@@ -39,7 +39,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.decoder import Decoder, _decode_sel_core, _pad_pow2
+from repro.core.decoder import (BlockDigestError, Decoder, _decode_sel_core,
+                                _pad_pow2)
 from repro.core.format import Archive
 from repro.core.index import ReadIndex, split_starts
 
@@ -149,10 +150,16 @@ class CompressedResidentStore:
 
     def __init__(self, archive: Archive, index: Optional[ReadIndex] = None,
                  backend: str = "auto", cache_blocks: int = 0,
-                 cache_policy: Union[str, object] = "lru"):
+                 cache_policy: Union[str, object] = "lru",
+                 verify: bool = False, on_error: str = "raise"):
+        from repro.resilience import check_on_error
         self.decoder = Decoder(archive, backend=backend)
         self.index = index
         self.block_size = archive.block_size
+        # store-wide defaults for the detect→recover→degrade knobs; every
+        # fetch entry point accepts per-call overrides
+        self.verify = bool(verify)
+        self.on_error = check_on_error(on_error)
         self._cache_cap = int(cache_blocks)
         if self._cache_cap > 0:
             from repro.api.cache import BlockCache
@@ -230,7 +237,8 @@ class CompressedResidentStore:
     def attach_sharded(self, mesh, axes: Tuple[str, ...] = ("data",),
                        cache_blocks: int = 0,
                        cache_policy: Union[str, object] = "lru",
-                       verify: bool = False) -> "ShardedResidency":
+                       verify: bool = False,
+                       on_error: str = "raise") -> "ShardedResidency":
         """Partition the compressed archive across `mesh` and attach the
         sharded residency plane (idempotent for a matching mesh/axes —
         repeat calls with the same geometry reuse the existing partition
@@ -238,26 +246,47 @@ class CompressedResidentStore:
         sr = self.sharded
         if (sr is not None and sr.part.mesh == mesh and sr.axes == axes
                 and sr.cache_blocks == int(cache_blocks)
-                and sr.verify == verify):
+                and sr.verify == verify and sr.on_error == on_error):
             return sr
         self.sharded = ShardedResidency(
             self, mesh, axes=axes, cache_blocks=cache_blocks,
-            cache_policy=cache_policy, verify=verify)
+            cache_policy=cache_policy, verify=verify, on_error=on_error)
         return self.sharded
 
     # ------------------------------------------------------------ internals
-    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool) -> jnp.ndarray:
+    def _rows_for_blocks(self, uniq: np.ndarray, mode2: bool,
+                         verify: bool = False,
+                         on_error: str = "raise") -> jnp.ndarray:
         """(U,) unique block ids → (U, block_size) decoded rows, through the
-        device-resident block cache when enabled."""
+        device-resident block cache when enabled. With `verify`, rows
+        digest-check inside the decode (recovering per `on_error`); any
+        block the decode reports corrupt (`Decoder.last_bad_blocks`) is
+        invalidated from the cache right after — the CachePlan registered
+        it resident BEFORE the decode, and a quarantined block's zero row
+        must never be served as a hit."""
         dec = self.decoder
-        decode = (dec.decode_blocks if mode2
-                  else dec.decode_blocks_host_entropy)
+        base = (dec.decode_blocks if mode2
+                else dec.decode_blocks_host_entropy)
+        if verify:
+            # an all-hit cache plan never reaches the decoder — clear the
+            # per-call outcome state here so stale bad-block reports from
+            # an earlier call cannot leak into this one's corrupt mask
+            dec.last_bad_blocks = np.zeros(0, np.int64)
+            dec.last_suspect_blocks = np.zeros(0, np.int64)
+            def decode(sel, pad_groups=True):
+                return base(sel, verify=True, pad_groups=pad_groups,
+                            on_error=on_error)
+        else:
+            decode = base
         if self._cache is None:
             # pad the selection to a power of two so random batches don't
             # retrace the decode kernels for every distinct unique count
             return decode(_pad_pow2(uniq.astype(np.int32)))[:uniq.size]
         if dec.da.mode != "global":
-            return self._cache.rows_for(uniq, decode)
+            rows = self._cache.rows_for(uniq, decode)
+            if verify and dec.last_bad_blocks.size:
+                self._cache.invalidate(dec.last_bad_blocks)
+            return rows
         # global/wavefront: a miss decode materializes whole anchor
         # windows — co-install the window rows the CachePlan did not ask
         # for into free slots, so a scan over the window is ONE launch.
@@ -267,16 +296,34 @@ class CompressedResidentStore:
         dec.last_window_rows = []
         try:
             rows = self._cache.rows_for(uniq, decode)
+            if verify and dec.last_bad_blocks.size:
+                self._cache.invalidate(dec.last_bad_blocks)
+            # repaired blocks' windows were collected twice (pre-repair
+            # garbage first) — exclude every once-suspect block from the
+            # speculative co-install, not just the finally-bad ones
+            bad = (dec.last_suspect_blocks if verify
+                   else np.zeros(0, np.int64))
             for first, wrows in dec.last_window_rows:
-                self._cache.install_extras(
-                    np.arange(first, first + wrows.shape[0]), wrows)
+                blks = np.arange(first, first + wrows.shape[0])
+                if bad.size:
+                    # a window touched by corruption may hold pre-repair
+                    # garbage rows — only provably-good rows co-install
+                    good = np.flatnonzero(~np.isin(blks, bad))
+                    if good.size == 0:
+                        continue
+                    self._cache.install_extras(blks[good],
+                                               wrows[jnp.asarray(good)])
+                else:
+                    self._cache.install_extras(blks, wrows)
         finally:
             dec.collect_window_rows = False
             dec.last_window_rows = []
         return rows
 
     # -------------------------------------------------------------- lookups
-    def fetch_reads(self, ids: Sequence[int], mode2: bool = True
+    def fetch_reads(self, ids: Sequence[int], mode2: bool = True,
+                    verify: Optional[bool] = None,
+                    on_error: Optional[str] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Batched variable-length random access.
 
@@ -284,6 +331,10 @@ class CompressedResidentStore:
         (B,) i32 lengths) in one selection decode. Requires a ReadIndex.
         Compatibility shim: lowers through the query plane
         (`QueryPlanner.plan_read_ids` → `DeviceExecutor`).
+
+        `verify`/`on_error` override the store defaults for this call;
+        per-read corrupt outcomes (on_error="partial") are in
+        `last_corrupt` afterwards.
         """
         assert self.index is not None, "fetch_reads requires a ReadIndex"
         ids_np = np.asarray(ids, np.int64).reshape(-1)
@@ -291,7 +342,16 @@ class CompressedResidentStore:
             return (jnp.zeros((0, self._max_len), jnp.uint8),
                     jnp.zeros((0,), jnp.int32))
         planner, executor = self._api()
-        return executor.run(planner.plan_read_ids(ids_np), mode2=mode2)
+        return executor.run(planner.plan_read_ids(ids_np), mode2=mode2,
+                            verify=verify, on_error=on_error)
+
+    @property
+    def last_corrupt(self) -> np.ndarray:
+        """Per-address corrupt mask of the most recent executor run
+        (bool[B]; all-False unless on_error="partial" hit bad blocks)."""
+        if self._executor is None:
+            return np.zeros(0, bool)
+        return self._executor.last_corrupt
 
     def fetch_read(self, r: int, mode2: bool = True) -> np.ndarray:
         """Single-read random access: the B=1 case of `fetch_reads`."""
@@ -357,12 +417,17 @@ class ShardedResidency:
     def __init__(self, store: CompressedResidentStore, mesh,
                  axes: Tuple[str, ...] = ("data",), cache_blocks: int = 0,
                  cache_policy: Union[str, object] = "lru",
-                 verify: bool = False):
+                 verify: bool = False, on_error: str = "raise"):
         from repro.core.sharded_decode import partition_archive
+        from repro.resilience import check_on_error
         self.store = store
         self.decoder = store.decoder
         self.axes = axes
         self.verify = verify
+        self.on_error = check_on_error(on_error)
+        # partition rebuilds performed by the recovery path (payload
+        # corruption healed on the flat copy, or a lost shard re-seeded)
+        self.shard_rebuilds = 0
         self.cache_blocks = int(cache_blocks)
         self.part = partition_archive(store.decoder, mesh, axes)
         if self.cache_blocks > 0:
@@ -396,8 +461,64 @@ class ShardedResidency:
                     "decode_launches": 0, "policy": "off"}
         return self._cache.info()
 
+    # ---------------------------------------------------- recovery (PR 10)
+    def _quarantine_hit(self, uniq: np.ndarray) -> bool:
+        q = self.decoder.quarantined
+        return bool(q) and bool(
+            np.isin(uniq, np.fromiter(q, np.int64, len(q))).any())
+
+    def _degraded_rows(self, uniq: np.ndarray,
+                       pad: bool = True) -> jnp.ndarray:
+        """Partial-failure fallback: serve through the UNPARTITIONED
+        decoder with partial semantics (quarantined blocks read zeros,
+        nothing installs into the sharded cache)."""
+        dec = self.decoder
+        sel = (_pad_pow2(uniq.astype(np.int32)) if pad
+               else uniq.astype(np.int32))
+        return dec.decode_blocks(sel, verify=True, on_error="partial",
+                                 pad_groups=pad)[:uniq.size]
+
+    def _heal_and_rebuild(self, uniq: np.ndarray, on_error: str) -> None:
+        """A partitioned decode failed its shard-local digest check.
+        Recovery composes HERE, at the residency layer (PR 8 rule): heal
+        on the UNPARTITIONED decoder — parity reconstruction patches the
+        flat device words and the host archive, or simply proves the
+        flat copy was never corrupt (lost-shard case) — then re-seed the
+        partition's stacked arrays from the healed copy, in place, so
+        the sharded cache and the `partitioned_rows` jit cache (keyed on
+        geometry, arrays passed as arguments) stay valid."""
+        from repro.core.sharded_decode import partition_archive
+        dec = self.decoder
+        try:
+            dec.decode_blocks(_pad_pow2(uniq.astype(np.int32)), verify=True,
+                              on_error=("repair" if on_error == "repair"
+                                        else "partial"))
+        except BlockDigestError:
+            if on_error != "partial":
+                raise
+        fresh = partition_archive(dec, self.part.mesh, self.axes)
+        self.part.arrays = fresh.arrays
+        self.shard_rebuilds += 1
+
+    def _resilient(self, run, uniq: np.ndarray, on_error: str,
+                   pad: bool = True) -> jnp.ndarray:
+        """Run a verified partitioned decode with heal-and-rebuild retry
+        (one retry: a second failure means genuinely unrecoverable)."""
+        if on_error == "partial" and self._quarantine_hit(uniq):
+            return self._degraded_rows(uniq, pad=pad)
+        try:
+            return run()
+        except BlockDigestError:
+            if on_error == "raise":
+                raise
+            self._heal_and_rebuild(uniq, on_error)
+            if on_error == "partial" and self._quarantine_hit(uniq):
+                return self._degraded_rows(uniq, pad=pad)
+            return run()
+
     # ----------------------------------------------------------------- rows
-    def rows_for_blocks(self, uniq: np.ndarray) -> jnp.ndarray:
+    def rows_for_blocks(self, uniq: np.ndarray,
+                        on_error: Optional[str] = None) -> jnp.ndarray:
         """(U,) unique global block ids → (U, block_size) rows through
         the partitioned archive (and the per-shard cache when enabled).
         Resets the decoder's per-call launch instrumentation like
@@ -405,10 +526,27 @@ class ShardedResidency:
         dec = self.decoder
         dec.launch_rounds_last = []
         dec.decoded_blocks_last = 0
+        on_error = self.on_error if on_error is None else on_error
         uniq = np.asarray(uniq, np.int64).reshape(-1)
         if self._cache is None:
-            return self._decode_uncached(uniq)
-        return self._cache.rows_for(uniq, self._decode_stacked)
+            run = lambda: self._decode_uncached(uniq)  # noqa: E731
+        else:
+            run = lambda: self._cache.rows_for(  # noqa: E731
+                uniq, self._decode_stacked)
+        if not self.verify or on_error == "raise":
+            return run()
+        return self._resilient(run, uniq, on_error)
+
+    def stream_rows(self, uniq: np.ndarray, verify: bool,
+                    on_error: str) -> jnp.ndarray:
+        """Cache-bypassing exact-size decode with the recovery wrapper —
+        the streaming executor's entry point (it never recovers itself)."""
+        uniq = np.asarray(uniq, np.int64).reshape(-1)
+        run = lambda: self._decode_uncached(  # noqa: E731
+            uniq, pad=False, verify=verify)
+        if not verify or on_error == "raise":
+            return run()
+        return self._resilient(run, uniq, on_error, pad=False)
 
     def _decode_stacked(self, loc: np.ndarray, n_rounds: int,
                         valid: np.ndarray) -> jnp.ndarray:

@@ -71,11 +71,26 @@ def run_resilient_training(
     log: Callable = print,
     steps_per_batch: int = 1,
     make_stream: Optional[Callable[[], object]] = None,
+    backoff_base_s: float = 0.0,
+    backoff_max_s: float = 30.0,
+    backoff_jitter: float = 0.1,
+    backoff_seed: int = 0,
+    sleep: Callable[[float], None] = time.sleep,
 ) -> Dict:
     """Checkpoint/restart training driver. `fail_hook(step)` may raise to
     inject failures (tests); real deployments raise from collectives when a
     host dies. On failure: restore latest checkpoint (+ loader state),
     rebuild the batch stream, continue.
+
+    Transient failures (a flaky device, a prefetch worker crash, a
+    collective that will succeed on retry) get bounded exponential
+    backoff before the restart: restart r sleeps
+    `min(backoff_max_s, backoff_base_s * 2**(r-1)) * (1 + backoff_jitter
+    * u)` with `u ~ U[0,1)` drawn from a `backoff_seed`-seeded generator
+    — deterministic across identical runs, jittered across seeds so a
+    fleet of restarting workers doesn't thundering-herd the checkpoint
+    store. The default `backoff_base_s=0` keeps restarts immediate
+    (tests); `sleep` is injectable.
 
     The loader is consumed strictly through the `ArchiveDataset` surface:
     `state_dict()/load_state_dict()` for the restore point (sampler config
@@ -94,6 +109,7 @@ def run_resilient_training(
         else:
             raise ValueError("need batches or loader/make_stream")
     restarts = 0
+    backoff_rng = np.random.default_rng(backoff_seed)
     step = start_step
     it = iter(batches) if batches is not None else make_stream()
     if ckpt.latest_step() is None:       # bootstrap restore point
@@ -129,8 +145,14 @@ def run_resilient_training(
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded restart budget ({max_restarts})") from e
+            delay = min(backoff_max_s,
+                        backoff_base_s * 2.0 ** (restarts - 1))
+            delay *= 1.0 + backoff_jitter * float(backoff_rng.random())
             log(f"[ft] step {step} failed ({type(e).__name__}: {e}); "
-                f"restoring latest checkpoint (restart {restarts})")
+                f"restoring latest checkpoint (restart {restarts}, "
+                f"backoff {delay:.2f}s)")
+            if delay > 0.0:
+                sleep(delay)
             restored = ckpt.restore()
             manifest = restored.pop("_manifest")
             state = restored

@@ -1,0 +1,42 @@
+"""Self-healing decode: the detect → recover → degrade loop.
+
+PR 3/4 gave every decode path on-device FNV detection; this package
+closes the loop. `parity` builds and device-reconstructs XOR parity over
+k-block groups of compressed payload words (`encode(...,
+parity_group=k)`, v4 `ACEJAX05` format tail), `faults` injects seeded,
+deterministic failures into every layer that can recover from them, and
+`chaos` sweeps the scenarios end to end as a CI smoke lane
+(`python -m repro.resilience.chaos --smoke`).
+
+Partial-failure semantics ride the query plane as `on_error`:
+
+  "raise"   — detection is fatal (`BlockDigestError`), the pre-PR-10
+              behavior and still the default;
+  "repair"  — single-block corruption heals transparently (parity
+              reconstruction + one re-decode + re-verify); anything
+              unrecoverable still raises;
+  "partial" — unrecoverable blocks quarantine (never re-decoded, never
+              cache-installed), their rows zero, and per-address typed
+              outcomes flow to the caller instead of an exception.
+
+Recovery composes at the decoder / residency layer — executors only
+thread the knob through (the PR 8 composition rule).
+"""
+from repro.resilience.faults import (FaultInjector, PrefetchCrash,
+                                     TransientDecodeError)
+from repro.resilience.parity import build_parity, reconstruct_blocks
+
+ON_ERROR_MODES = ("raise", "repair", "partial")
+
+
+def check_on_error(on_error: str) -> str:
+    """Validate an `on_error` knob (the single home of the constraint)."""
+    if on_error not in ON_ERROR_MODES:
+        raise ValueError(
+            f"on_error={on_error!r} not in {ON_ERROR_MODES}")
+    return on_error
+
+
+__all__ = ["FaultInjector", "TransientDecodeError", "PrefetchCrash",
+           "build_parity", "reconstruct_blocks", "ON_ERROR_MODES",
+           "check_on_error"]

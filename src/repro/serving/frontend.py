@@ -67,14 +67,27 @@ class Overloaded:
     status: str = "overloaded"
 
 
+@dataclasses.dataclass(frozen=True)
+class ReadCorrupt:
+    """Typed payload of a request whose covering blocks were
+    unrecoverable (quarantined) under `on_error="partial"` — the
+    per-request degradation contract: THIS request reports corruption,
+    every other request in the same cycle completes normally."""
+    tenant: str
+    address: object
+    status: str = "corrupt"
+
+
 @dataclasses.dataclass
 class Result:
     """Completed request. status: "ok" (served within deadline), "late"
     (served after it), "shed" (expired in queue, never decoded —
-    payload None)."""
+    payload None), "corrupt" (its blocks were unrecoverable under
+    on_error="partial" — payload is a typed `ReadCorrupt`, never
+    silently-zeroed bytes)."""
     status: str
     tenant: str
-    payload: Optional[np.ndarray]
+    payload: Optional[Union[np.ndarray, ReadCorrupt]]
     latency_us: float
     deadline_us: float            # the absolute deadline it was held to
 
@@ -107,6 +120,7 @@ class _TenantState:
     late: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    corrupt: int = 0
 
 
 class ServingFrontend:
@@ -129,7 +143,9 @@ class ServingFrontend:
                  max_batch: int = 256,
                  device_budget_bytes: Optional[int] = None,
                  estimator: Optional[ServiceEstimator] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 verify: Optional[bool] = None,
+                 on_error: Optional[str] = None):
         if isinstance(archives, GenomicArchive):
             archives = {"default": archives}
         if not archives:
@@ -137,6 +153,12 @@ class ServingFrontend:
         self.archives: Dict[str, GenomicArchive] = dict(archives)
         self.max_batch = int(max_batch)
         self.clock = clock
+        # detect→recover knobs for every dispatched decode (None = each
+        # archive store's defaults). With on_error="partial", a request
+        # whose blocks are unrecoverable resolves as a typed "corrupt"
+        # Result while the rest of its cycle completes untouched.
+        self.verify = verify
+        self.on_error = on_error
         self.estimator = estimator or ServiceEstimator()
         self.device_budget_bytes = device_budget_bytes
         if device_budget_bytes is not None:
@@ -183,7 +205,8 @@ class ServingFrontend:
         b = self._batchers.get(archive_key)
         if b is None:
             b = ReadBatcher(self.archives[archive_key],
-                            max_batch=self.max_batch)
+                            max_batch=self.max_batch,
+                            verify=self.verify, on_error=self.on_error)
             self._batchers[archive_key] = b
         return b
 
@@ -298,11 +321,16 @@ class ServingFrontend:
             tickets = [b.submit(int(a)) for a in addrs]
             out = b.flush()
             payloads = [out[t] for t in tickets]
+            corrupt = [t in b.last_corrupt_tickets for t in tickets]
             svc_us = b.stats()["last_flush_us"]
         else:
-            rows, lens = ga.query(addrs)
+            rows, lens = ga.query(addrs, verify=self.verify,
+                                  on_error=self.on_error)
             rows, lens = np.asarray(rows), np.asarray(lens)
             payloads = [rows[i, :int(lens[i])] for i in range(len(reqs))]
+            lc = np.asarray(ga.last_corrupt)
+            corrupt = (lc[:len(reqs)].tolist() if lc.size >= len(reqs)
+                       else [False] * len(reqs))
             svc_us = (self.clock() - t0) * 1e6
         done = self._now_us()
         info1 = ga.cache_info()
@@ -310,9 +338,19 @@ class ServingFrontend:
         ts.cache_misses += info1["misses"] - info0["misses"]
         blocks = (info1["hits"] - info0["hits"]
                   + info1["misses"] - info0["misses"])
-        for req, payload in zip(reqs, payloads):
-            late = done > req.deadline_us
+        for req, payload, bad in zip(reqs, payloads, corrupt):
             ts.completed += 1
+            if bad:
+                # per-request degradation: THIS request reports a typed
+                # corruption outcome; its batchmates complete normally
+                ts.corrupt += 1
+                self._done[req.seq] = Result(
+                    status="corrupt", tenant=tenant,
+                    payload=ReadCorrupt(tenant=tenant, address=req.address),
+                    latency_us=done - req.submit_us,
+                    deadline_us=req.deadline_us)
+                continue
+            late = done > req.deadline_us
             ts.late += int(late)
             self._done[req.seq] = Result(
                 status="late" if late else "ok", tenant=tenant,
@@ -369,6 +407,7 @@ class ServingFrontend:
                 "queued": ts.queued, "submitted": ts.submitted,
                 "completed": ts.completed, "rejected": ts.rejected,
                 "shed": ts.shed, "late": ts.late,
+                "corrupt": ts.corrupt,
                 "cache_hits": ts.cache_hits,
                 "cache_misses": ts.cache_misses,
                 "cache_hit_rate": (ts.cache_hits / acc) if acc else 0.0,

@@ -52,7 +52,9 @@ class ReadBatcher:
     across flushes (`cache_info()` shows the counters).
     """
 
-    def __init__(self, store, max_batch: int = 256):
+    def __init__(self, store, max_batch: int = 256,
+                 verify: Optional[bool] = None,
+                 on_error: Optional[str] = None):
         # a GenomicArchive is accepted uniformly: fetches and cache
         # counters both resolve against its underlying store, so callers
         # never reach through `.store` themselves
@@ -61,6 +63,14 @@ class ReadBatcher:
         self.store = self.archive.store if self.archive is not None \
             else store
         self.max_batch = int(max_batch)
+        # detect→recover knobs threaded into every flush (None = store
+        # defaults). Under on_error="partial", tickets whose read touched
+        # an unrecoverable block land in `last_corrupt_tickets` instead of
+        # silently carrying zeroed bytes.
+        self.verify = verify
+        self.on_error = on_error
+        self.last_corrupt_tickets: set = set()
+        self.corrupt_served = 0
         self._queue: List[_Pending] = []
         self._next_ticket = 0
         self.flushes = 0
@@ -96,6 +106,7 @@ class ReadBatcher:
         estimator reads these to price deadline feasibility."""
         return {"flushes": self.flushes, "served": self.served,
                 "unique_fetched": self.unique_fetched,
+                "corrupt_served": self.corrupt_served,
                 "pending": len(self._queue),
                 "last_flush_us": self.last_flush_us,
                 "avg_flush_us": (self.total_flush_us / self.flushes
@@ -107,14 +118,20 @@ class ReadBatcher:
         out: Dict[int, np.ndarray] = {}
         t0 = time.perf_counter()
         flushed = False
+        self.last_corrupt_tickets = set()
         while self._queue:
             # dedup across the WHOLE queue, then decode up to max_batch
             # unique rows per fetch — duplicates never cost a second row
             # even when they land in different slices
             uniq = np.unique(np.asarray([p.read_id for p in self._queue],
                                         np.int64))[:self.max_batch]
-            rows, lens = self.store.fetch_reads(uniq, mode2=mode2)
+            rows, lens = self.store.fetch_reads(uniq, mode2=mode2,
+                                                verify=self.verify,
+                                                on_error=self.on_error)
             rows, lens = np.asarray(rows), np.asarray(lens)
+            lc = np.asarray(self.store.last_corrupt)
+            if lc.size != uniq.size:
+                lc = np.zeros(uniq.size, bool)
             pos = {int(r): j for j, r in enumerate(uniq)}
             # dequeue only after the fetch succeeds: a failure leaves
             # every pending ticket intact for a retry flush
@@ -125,6 +142,9 @@ class ReadBatcher:
                     remaining.append(p)
                     continue
                 out[p.ticket] = rows[j, :int(lens[j])]
+                if bool(lc[j]):
+                    self.last_corrupt_tickets.add(p.ticket)
+                    self.corrupt_served += 1
                 self.served += 1
             self._queue = remaining
             self.flushes += 1
